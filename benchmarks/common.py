@@ -1,0 +1,52 @@
+"""Shared benchmark utilities: suite loading, cache scaling, CSV output."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, List, Tuple
+
+import numpy as np
+
+from repro.sim import matrices
+from repro.sim.segfold_sim import SegFoldConfig
+
+CACHE_FULL = int(1.5 * 1024 * 1024)
+
+
+def load_suite(scale_cap: int = 2048, with_extra: bool = False):
+    """(name, A, B=Aᵀ, SegFoldConfig-with-scaled-cache) for the 15-matrix
+    suite (§V).  The cache scales with the matrix scale-down factor so the
+    cache-to-working-set ratio matches the original experiment."""
+    out = []
+    for name, (a, spec) in matrices.suite(scale_cap=scale_cap).items():
+        if name == "olm5000" and not with_extra:
+            continue
+        cache = max(int(CACHE_FULL * spec.scale), 64 * 1024)
+        out.append((name, a, a.transpose(), SegFoldConfig(cache_bytes=cache)))
+    return out
+
+
+def geomean(xs: Iterable[float]) -> float:
+    xs = list(xs)
+    return float(np.exp(np.mean(np.log(xs)))) if xs else float("nan")
+
+
+class Csv:
+    """Collects ``name,us_per_call,derived`` rows (one per measurement)."""
+
+    def __init__(self):
+        self.rows: List[Tuple[str, float, str]] = []
+
+    def add(self, name: str, us_per_call: float, derived: str):
+        self.rows.append((name, us_per_call, derived))
+
+    def emit(self) -> str:
+        lines = ["name,us_per_call,derived"]
+        for n, u, d in self.rows:
+            lines.append(f"{n},{u:.1f},{d}")
+        return "\n".join(lines)
+
+
+def timed(fn: Callable, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6

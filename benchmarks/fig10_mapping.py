@@ -1,0 +1,27 @@
+"""Fig. 10: mapping ablation — Zero-Offset vs SegFold LUT vs Ideal oracle."""
+import dataclasses
+
+from repro.sim.segfold_sim import simulate_segfold
+
+from .common import Csv, geomean, load_suite, timed
+
+
+def run(csv: Csv, scale_cap: int = 2048) -> dict:
+    lut_vs_zero, lut_vs_ideal = [], []
+    for name, a, b, cfg in load_suite(scale_cap, with_extra=True):
+        lut, us = timed(simulate_segfold, a, b,
+                        dataclasses.replace(cfg, mapping="lut"))
+        zero = simulate_segfold(a, b, dataclasses.replace(cfg, mapping="zero"))
+        ideal = simulate_segfold(a, b, dataclasses.replace(cfg, mapping="ideal"))
+        r_z = zero.cycles / lut.cycles
+        r_i = lut.cycles / ideal.cycles
+        lut_vs_zero.append(r_z)
+        lut_vs_ideal.append(r_i)
+        csv.add(f"fig10/{name}", us,
+                f"lut_speedup_over_zero={r_z:.3f};overhead_vs_ideal="
+                f"{(r_i - 1) * 100:.2f}%")
+    csv.add("fig10/GEOMEAN", 0.0,
+            f"lut_vs_zero={geomean(lut_vs_zero):.3f}(paper:1.20);"
+            f"lut_overhead_vs_ideal={(geomean(lut_vs_ideal)-1)*100:.2f}%(paper:1.2%)")
+    return {"lut_vs_zero": geomean(lut_vs_zero),
+            "lut_vs_ideal": geomean(lut_vs_ideal)}

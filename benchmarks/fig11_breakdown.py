@@ -1,0 +1,43 @@
+"""Fig. 11: incremental attribution — base → +SELECTA → +SEGMENTBC →
++folding → +IPM (paper: full stack ≈ 3.1× over base)."""
+import dataclasses
+
+from repro.sim.segfold_sim import SegFoldConfig, simulate_segfold
+
+from .common import Csv, geomean, load_suite, timed
+
+STAGES = [
+    ("base", dict(schedule_mode="static_rr", segmentbc_enabled=False,
+                  spatial_folding=False, mapping="zero")),
+    ("+selecta", dict(schedule_mode="selecta", segmentbc_enabled=False,
+                      spatial_folding=False, mapping="zero")),
+    ("+segmentbc", dict(schedule_mode="selecta", segmentbc_enabled=True,
+                        spatial_folding=False, mapping="zero")),
+    ("+folding", dict(schedule_mode="selecta", segmentbc_enabled=True,
+                      spatial_folding=True, mapping="zero")),
+    ("+ipm_lut", dict(schedule_mode="selecta", segmentbc_enabled=True,
+                      spatial_folding=True, mapping="lut")),
+]
+
+
+def run(csv: Csv, scale_cap: int = 1536, n_matrices: int = 12) -> dict:
+    gains = {name: [] for name, _ in STAGES[1:]}
+    total = []
+    for name, a, b, cfg in load_suite(scale_cap)[:n_matrices]:
+        prev = None
+        base_c = None
+        for sname, over in STAGES:
+            res, us = timed(simulate_segfold, a, b,
+                            dataclasses.replace(cfg, **over))
+            if sname == "base":
+                base_c = res.cycles
+            else:
+                gains[sname].append(prev / res.cycles)
+            prev = res.cycles
+        total.append(base_c / prev)
+        csv.add(f"fig11/{name}", us, f"full_over_base={base_c / prev:.2f}")
+    per = {k: geomean(v) for k, v in gains.items()}
+    csv.add("fig11/GEOMEAN", 0.0,
+            "full_over_base=%.2f(paper:3.1);" % geomean(total)
+            + ";".join(f"{k}={v:.2f}x" for k, v in per.items()))
+    return {"full_over_base": geomean(total), "stages": per}

@@ -1,0 +1,37 @@
+"""Fig. 12: hardware-parameter sensitivity — (a) multicast width 1–16,
+(b) active-window size 1–64, on synthetic square matrices."""
+import dataclasses
+
+import numpy as np
+
+from repro.sim import matrices
+from repro.sim.segfold_sim import SegFoldConfig, simulate_segfold
+
+from .common import Csv, timed
+
+
+def run(csv: Csv, sizes=(256, 512), densities=(0.05, 0.1)) -> dict:
+    out = {"width": {}, "window": {}}
+    for n in sizes:
+        for d in densities:
+            rng = np.random.default_rng(n + int(d * 100))
+            a = matrices.synthetic(rng, n, d)
+            b = matrices.synthetic(rng, n, d)
+            cfg = SegFoldConfig()
+            c4 = simulate_segfold(a, b, dataclasses.replace(
+                cfg, multicast_width=4)).cycles
+            for w in (1, 2, 4, 8, 16):
+                res, us = timed(simulate_segfold, a, b,
+                                dataclasses.replace(cfg, multicast_width=w))
+                rel = res.cycles / c4
+                out["width"][(n, d, w)] = rel
+                csv.add(f"fig12a/N{n}_d{d}_BRL{w}", us, f"norm_to_BRL4={rel:.3f}")
+            c32 = simulate_segfold(a, b, dataclasses.replace(
+                cfg, window=32)).cycles
+            for w in (1, 2, 4, 8, 16, 32, 64):
+                res, us = timed(simulate_segfold, a, b,
+                                dataclasses.replace(cfg, window=w))
+                rel = res.cycles / c32
+                out["window"][(n, d, w)] = rel
+                csv.add(f"fig12b/N{n}_d{d}_W{w}", us, f"norm_to_W32={rel:.3f}")
+    return out

@@ -1,0 +1,31 @@
+"""Fig. 13: density sweep — cycles/MAC vs density for SegFold, Spada and
+static Flexagon OP/Gustavson (paper: SegFold flat, Spada degrades > 0.4,
+OP improves with density, SegFold wins even fully dense)."""
+import numpy as np
+
+from repro.sim import matrices
+from repro.sim.baselines import flexagon_gust, flexagon_op, spada
+from repro.sim.segfold_sim import SegFoldConfig, simulate_segfold
+
+from .common import Csv, timed
+
+
+def run(csv: Csv, sizes=(256,), densities=(0.05, 0.1, 0.2, 0.4, 0.7, 1.0)) -> dict:
+    out = {}
+    for n in sizes:
+        for d in densities:
+            rng = np.random.default_rng(int(n * d * 100))
+            a = matrices.synthetic(rng, n, d)
+            b = matrices.synthetic(rng, n, d)
+            cfg = SegFoldConfig()
+            seg, us = timed(simulate_segfold, a, b, cfg)
+            rows = {
+                "segfold": seg.cycles_per_mac,
+                "spada": spada(a, b, cfg).cycles_per_mac,
+                "flex_op": flexagon_op(a, b, cfg).cycles_per_mac,
+                "flex_gust": flexagon_gust(a, b, cfg).cycles_per_mac,
+            }
+            out[(n, d)] = rows
+            csv.add(f"fig13/N{n}_d{d}", us,
+                    ";".join(f"{k}_cpm={v:.4f}" for k, v in rows.items()))
+    return out

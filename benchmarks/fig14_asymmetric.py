@@ -1,0 +1,27 @@
+"""Fig. 14: asymmetric sparsity — swap ratio cyc(dA,dB)/cyc(dB,dA); blue
+(<1) favors the sparser matrix as operand A, red corner at extreme ratios."""
+import numpy as np
+
+from repro.sim import matrices
+from repro.sim.segfold_sim import SegFoldConfig, simulate_segfold
+
+from .common import Csv, timed
+
+
+def run(csv: Csv, n: int = 256,
+        densities=(0.002, 0.01, 0.05, 0.2, 0.5)) -> dict:
+    out = {}
+    cfg = SegFoldConfig()
+    rng = np.random.default_rng(0)
+    mats = {d: (matrices.synthetic(rng, n, d), matrices.synthetic(rng, n, d))
+            for d in densities}
+    for i, da in enumerate(densities):
+        for db in densities[i:]:
+            a = mats[da][0]
+            b = mats[db][1]
+            c_ab, us = timed(simulate_segfold, a, b, cfg)
+            c_ba = simulate_segfold(b, a, cfg)
+            ratio = c_ab.cycles / c_ba.cycles
+            out[(da, db)] = ratio
+            csv.add(f"fig14/dA{da}_dB{db}", us, f"swap_ratio={ratio:.3f}")
+    return out

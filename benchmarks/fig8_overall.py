@@ -1,0 +1,25 @@
+"""Fig. 8: SegFold speedup over Spada and static Flexagon configs on the
+SuiteSparse-like matrix suite (synthetic stand-ins, DESIGN.md §8)."""
+from repro.sim.baselines import flexagon_best, spada
+from repro.sim.segfold_sim import simulate_segfold
+
+from .common import Csv, geomean, load_suite, timed
+
+
+def run(csv: Csv, scale_cap: int = 2048) -> dict:
+    v_spada, v_static = [], []
+    for name, a, b, cfg in load_suite(scale_cap):
+        seg, us = timed(simulate_segfold, a, b, cfg)
+        sp = spada(a, b, cfg)
+        fb = flexagon_best(a, b, cfg)
+        su_sp = sp.cycles / seg.cycles
+        su_fb = fb["cycles"] / seg.cycles
+        v_spada.append(su_sp)
+        v_static.append(su_fb)
+        csv.add(f"fig8/{name}", us,
+                f"speedup_vs_spada={su_sp:.2f};vs_static={su_fb:.2f}"
+                f"[{fb['config']}]")
+    g_sp, g_fb = geomean(v_spada), geomean(v_static)
+    csv.add("fig8/GEOMEAN", 0.0,
+            f"vs_spada={g_sp:.2f}(paper:1.95);vs_static={g_fb:.2f}(paper:5.3)")
+    return {"geomean_vs_spada": g_sp, "geomean_vs_static": g_fb}

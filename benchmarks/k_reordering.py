@@ -1,0 +1,20 @@
+"""§VI-C.1: fixed-k-order ablation (paper: 0.670±0.065 of baseline)."""
+import dataclasses
+
+import numpy as np
+
+from repro.sim.segfold_sim import simulate_segfold
+
+from .common import Csv, load_suite, timed
+
+
+def run(csv: Csv, scale_cap: int = 1536) -> dict:
+    ratios = []
+    for name, a, b, cfg in load_suite(scale_cap, with_extra=True)[:12]:
+        dyn, us = timed(simulate_segfold, a, b, cfg)
+        fixed = simulate_segfold(a, b, dataclasses.replace(cfg, dynamic_k=False))
+        ratios.append(dyn.cycles / fixed.cycles)
+        csv.add(f"k_reorder/{name}", us, f"fixed_k_norm_perf={ratios[-1]:.3f}")
+    m, s = float(np.mean(ratios)), float(np.std(ratios))
+    csv.add("k_reorder/MEAN", 0.0, f"{m:.3f}±{s:.3f}(paper:0.670±0.065)")
+    return {"mean": m, "std": s}

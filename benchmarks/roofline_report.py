@@ -1,0 +1,25 @@
+"""§Roofline: aggregate the dry-run artifacts into the per-cell table."""
+import glob
+import json
+import os
+
+from .common import Csv
+
+ART = os.path.join(os.path.dirname(__file__), "..", "artifacts", "dryrun")
+
+
+def run(csv: Csv) -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ART, "*.json"))):
+        d = json.load(open(path))
+        if "roofline" not in d:
+            continue
+        r = d["roofline"]
+        ratio = d.get("useful_flops_ratio")
+        rows.append(d)
+        csv.add(f"roofline/{d['arch']}__{d['shape']}__{d['mesh']}",
+                d.get("compile_s", 0) * 1e6,
+                f"compute_s={r['compute_s']:.3e};memory_s={r['memory_s']:.3e};"
+                f"collective_s={r['collective_s']:.3e};dominant={r['dominant']};"
+                f"useful_flops_ratio={ratio if ratio is None else round(ratio, 3)}")
+    return rows

@@ -1,0 +1,50 @@
+"""Benchmark harness entry point: one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run            # full suite
+    PYTHONPATH=src python -m benchmarks.run --quick    # reduced scale
+    PYTHONPATH=src python -m benchmarks.run --only fig8,fig10
+Prints ``name,us_per_call,derived`` CSV (the harness contract).
+"""
+import argparse
+import sys
+import time
+
+from .common import Csv
+from . import (fig8_overall, fig9_nonsquare, fig10_mapping, fig11_breakdown,
+               fig12_sensitivity, fig13_density, fig14_asymmetric,
+               k_reordering, kernel_bench, roofline_report)
+
+ALL = {
+    "fig8": lambda csv, q: fig8_overall.run(csv, scale_cap=1024 if q else 2048),
+    "fig9": lambda csv, q: fig9_nonsquare.run(csv, scale_cap=1024 if q else 2048),
+    "fig10": lambda csv, q: fig10_mapping.run(csv, scale_cap=1024 if q else 2048),
+    "fig11": lambda csv, q: fig11_breakdown.run(csv, scale_cap=1024 if q else 1536),
+    "fig12": lambda csv, q: fig12_sensitivity.run(
+        csv, sizes=(256,) if q else (256, 512)),
+    "fig13": lambda csv, q: fig13_density.run(
+        csv, densities=(0.05, 0.2, 1.0) if q else (0.05, 0.1, 0.2, 0.4, 0.7, 1.0)),
+    "fig14": lambda csv, q: fig14_asymmetric.run(
+        csv, densities=(0.01, 0.05, 0.2) if q else (0.002, 0.01, 0.05, 0.2, 0.5)),
+    "k_reordering": lambda csv, q: k_reordering.run(
+        csv, scale_cap=1024 if q else 1536),
+    "kernels": lambda csv, q: kernel_bench.run(csv),
+    "roofline": lambda csv, q: roofline_report.run(csv),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(ALL)
+    csv = Csv()
+    for name in names:
+        t0 = time.time()
+        ALL[name](csv, args.quick)
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    print(csv.emit())
+
+
+if __name__ == "__main__":
+    main()

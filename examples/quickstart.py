@@ -1,0 +1,54 @@
+"""Quickstart: the Segment dataflow end-to-end in 60 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. element-granularity Segment dataflow (paper Alg. 1 + §III-B) on a small
+   sparse product — the faithful reference;
+2. TPU block-level Segment schedule + Pallas kernel (interpret on CPU);
+3. cycle-approximate simulator: SegFold vs Spada-like vs best-static.
+"""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.formats import BSR, CSC, random_csr
+from repro.core.segmentbc import segment_spgemm_elementwise
+from repro.core.selecta import run_selecta, selecta_stats
+from repro.kernels import ops
+from repro.sim import matrices
+from repro.sim.baselines import flexagon_best, spada
+from repro.sim.segfold_sim import SegFoldConfig, simulate_segfold
+
+rng = np.random.default_rng(0)
+
+# --- 1. the dataflow itself -------------------------------------------------
+a = random_csr(rng, (96, 128), 0.08)
+b = random_csr(rng, (128, 80), 0.08)
+c, telemetry = segment_spgemm_elementwise(CSC.from_csr(a), b, mapping="lut")
+assert np.allclose(c, a.to_dense() @ b.to_dense(), atol=1e-4)
+stats = selecta_stats(run_selecta(CSC.from_csr(a)), r_max=16)
+print(f"[1] Segment SpGEMM correct | SELECTA occupancy={stats['occupancy']:.2f} "
+      f"k-sharing={stats['k_sharing']:.2f} "
+      f"mean displacement={telemetry['mean_displacement']:.2f}")
+
+# --- 2. TPU block schedule + Pallas kernel ---------------------------------
+A = BSR.random(rng, (512, 768), (64, 64), 0.25)
+x = jnp.asarray(rng.standard_normal((768, 256)).astype(np.float32))
+plan = ops.plan_spmm(A, policy="segment")
+y = plan(x, bn=128)
+assert np.allclose(np.asarray(y), A.to_dense() @ np.asarray(x), atol=1e-3)
+t = plan.traffic
+print(f"[2] Pallas Segment-SpMM correct | schedule traffic "
+      f"{t['total']/1e6:.1f} MB (B fetches: {t['b_fetches']}, "
+      f"C segments: {t['c_segments']})")
+
+# --- 3. the accelerator simulator ------------------------------------------
+m = matrices.banded(rng, 1024, 1024, 0.01)
+mt = m.transpose()
+cfg = SegFoldConfig(cache_bytes=300 * 1024)
+seg = simulate_segfold(m, mt, cfg)
+sp = spada(m, mt, cfg)
+fb = flexagon_best(m, mt, cfg)
+print(f"[3] simulator: SegFold {seg.cycles:.0f} cyc | "
+      f"Spada {sp.cycles:.0f} ({sp.cycles/seg.cycles:.2f}x) | "
+      f"best static [{fb['config']}] {fb['cycles']:.0f} "
+      f"({fb['cycles']/seg.cycles:.2f}x)")

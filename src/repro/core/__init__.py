@@ -1,0 +1,29 @@
+"""Segment dataflow core: the paper's contribution as a composable library.
+
+Public surface:
+
+* formats:   :class:`CSR`, :class:`DCSR`, :class:`CSC`, :class:`BSR`
+* dataflow:  :func:`run_selecta`, :func:`segment_spgemm_elementwise`,
+             static references in :mod:`repro.core.dataflows`
+* folding:   :func:`spatial_fold`, :func:`fold_segments`, :func:`balance_bins`
+* schedules: :func:`build_spmm_schedule`, :func:`build_spgemm_schedule`
+"""
+from .formats import BSR, CSC, CSR, DCSR, csr_from_coo, random_csr, spgemm_reference
+from .selecta import SelectaState, run_selecta, selecta_stats
+from .segmentbc import VSpace, segment_spgemm_elementwise
+from .folding import balance_bins, fold_segments, round_robin_bins, spatial_fold, temporal_fold_spills
+from .schedule import (SpgemmSchedule, SpmmSchedule, build_spgemm_schedule,
+                       build_spmm_schedule, shard_schedule,
+                       spgemm_schedule_traffic, spmm_schedule_traffic,
+                       symbolic_spgemm)
+
+__all__ = [
+    "BSR", "CSC", "CSR", "DCSR", "csr_from_coo", "random_csr", "spgemm_reference",
+    "SelectaState", "run_selecta", "selecta_stats",
+    "VSpace", "segment_spgemm_elementwise",
+    "balance_bins", "fold_segments", "round_robin_bins", "spatial_fold",
+    "temporal_fold_spills",
+    "SpgemmSchedule", "SpmmSchedule", "build_spgemm_schedule",
+    "build_spmm_schedule", "shard_schedule", "spgemm_schedule_traffic",
+    "spmm_schedule_traffic", "symbolic_spgemm",
+]

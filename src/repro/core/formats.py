@@ -1,0 +1,299 @@
+"""Sparse matrix containers used across the Segment dataflow stack.
+
+Three formats, mirroring the paper's storage choices (§IV-B):
+
+* ``CSR``   — row-major compressed rows (matrix ``B`` is processed at row
+  granularity and stored row-major).
+* ``DCSR``  — doubly compressed sparse rows (paper's choice for ``B``): a second
+  compression level skips empty rows in O(1), which matters for hyper-sparse
+  matrices where most rows in the active window are empty.
+* ``CSC``   — column-major (matrix ``A`` is consumed column-wise by SELECTA, so
+  it is stored column-major).
+* ``BSR``   — block-sparse rows: the TPU-native granularity. A BSR nonzero is a
+  dense ``(bm, bk)`` tile destined for the MXU.
+
+All containers are host-side numpy (schedules are built on host / traced into
+jit via static structure); ``BSR.device()`` returns jnp arrays for kernels.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Element-granularity formats (simulator + reference dataflows)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class CSR:
+    """Compressed sparse row. ``indptr`` has length ``M+1``."""
+
+    shape: Tuple[int, int]
+    indptr: np.ndarray   # int32 (M+1,)
+    indices: np.ndarray  # int32 (nnz,) column ids, sorted within a row
+    data: np.ndarray     # float32 (nnz,)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    @property
+    def density(self) -> float:
+        m, n = self.shape
+        return self.nnz / float(max(m * n, 1))
+
+    def row(self, i: int) -> Tuple[np.ndarray, np.ndarray]:
+        lo, hi = int(self.indptr[i]), int(self.indptr[i + 1])
+        return self.indices[lo:hi], self.data[lo:hi]
+
+    def row_lengths(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    def to_dense(self) -> np.ndarray:
+        m, n = self.shape
+        out = np.zeros((m, n), dtype=self.data.dtype)
+        rows = np.repeat(np.arange(m), self.row_lengths())
+        out[rows, self.indices] = self.data
+        return out
+
+    def transpose(self) -> "CSR":
+        return csr_from_coo(
+            self.shape[::-1],
+            self.indices,
+            np.repeat(np.arange(self.shape[0]), self.row_lengths()),
+            self.data,
+        )
+
+    @staticmethod
+    def from_dense(a: np.ndarray) -> "CSR":
+        m, n = a.shape
+        rows, cols = np.nonzero(a)
+        return csr_from_coo((m, n), rows, cols, a[rows, cols])
+
+
+def csr_from_coo(shape, rows, cols, vals) -> CSR:
+    """Build a CSR with rows ascending and columns sorted within each row."""
+    rows = np.asarray(rows, dtype=np.int64)
+    cols = np.asarray(cols, dtype=np.int64)
+    vals = np.asarray(vals)
+    order = np.lexsort((cols, rows))
+    rows, cols, vals = rows[order], cols[order], vals[order]
+    # merge duplicates (sum semantics)
+    if rows.size:
+        key = rows * shape[1] + cols
+        uniq, inv = np.unique(key, return_inverse=True)
+        if uniq.size != key.size:
+            merged = np.zeros(uniq.size, dtype=np.float64)
+            np.add.at(merged, inv, vals.astype(np.float64))
+            rows = (uniq // shape[1]).astype(np.int64)
+            cols = (uniq % shape[1]).astype(np.int64)
+            vals = merged.astype(vals.dtype)
+    indptr = np.zeros(shape[0] + 1, dtype=np.int64)
+    np.add.at(indptr, rows + 1, 1)
+    indptr = np.cumsum(indptr)
+    return CSR(
+        shape=tuple(shape),
+        indptr=indptr.astype(np.int64),
+        indices=cols.astype(np.int32),
+        data=vals.astype(np.float32),
+    )
+
+
+@dataclasses.dataclass
+class DCSR:
+    """Doubly compressed sparse rows — only non-empty rows are materialized.
+
+    ``row_ids[i]`` is the Cartesian row index of compressed row ``i``;
+    ``indptr`` has length ``len(row_ids)+1``.  The paper stores ``B`` this way
+    so that the scheduler skips empty rows in O(1) (§IV-B).
+    """
+
+    shape: Tuple[int, int]
+    row_ids: np.ndarray  # int32 (nrows_nonempty,)
+    indptr: np.ndarray   # int64 (nrows_nonempty+1,)
+    indices: np.ndarray  # int32 (nnz,)
+    data: np.ndarray     # float32 (nnz,)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    @staticmethod
+    def from_csr(a: CSR) -> "DCSR":
+        lengths = a.row_lengths()
+        nonempty = np.nonzero(lengths > 0)[0]
+        indptr = np.concatenate([[0], np.cumsum(lengths[nonempty])])
+        # gather nnz in non-empty-row order (CSR already contiguous per row)
+        chunks_idx = []
+        chunks_val = []
+        for r in nonempty:
+            lo, hi = a.indptr[r], a.indptr[r + 1]
+            chunks_idx.append(a.indices[lo:hi])
+            chunks_val.append(a.data[lo:hi])
+        indices = np.concatenate(chunks_idx) if chunks_idx else np.zeros(0, np.int32)
+        data = np.concatenate(chunks_val) if chunks_val else np.zeros(0, np.float32)
+        return DCSR(
+            shape=a.shape,
+            row_ids=nonempty.astype(np.int32),
+            indptr=indptr.astype(np.int64),
+            indices=indices.astype(np.int32),
+            data=data.astype(np.float32),
+        )
+
+    def lookup(self, r: int) -> int:
+        """Compressed index of Cartesian row ``r`` or -1 (O(log nrows))."""
+        pos = np.searchsorted(self.row_ids, r)
+        if pos < self.row_ids.size and self.row_ids[pos] == r:
+            return int(pos)
+        return -1
+
+
+@dataclasses.dataclass
+class CSC:
+    """Compressed sparse column (A's storage; SELECTA scans columns of A)."""
+
+    shape: Tuple[int, int]
+    indptr: np.ndarray   # (K+1,) column pointers
+    indices: np.ndarray  # (nnz,) row ids, sorted within a column
+    data: np.ndarray
+
+    @property
+    def nnz(self) -> int:
+        return int(self.indices.shape[0])
+
+    def col(self, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        lo, hi = int(self.indptr[k]), int(self.indptr[k + 1])
+        return self.indices[lo:hi], self.data[lo:hi]
+
+    def col_lengths(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    @staticmethod
+    def from_csr(a: CSR) -> "CSC":
+        t = a.transpose()  # CSR of A^T == CSC of A
+        return CSC(shape=a.shape, indptr=t.indptr, indices=t.indices, data=t.data)
+
+    def to_dense(self) -> np.ndarray:
+        m, k = self.shape
+        out = np.zeros((m, k), dtype=self.data.dtype)
+        cols = np.repeat(np.arange(k), self.col_lengths())
+        out[self.indices, cols] = self.data
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Block-granularity format (TPU kernels)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class BSR:
+    """Block-sparse rows: nonzero dense tiles of shape ``(bm, bk)``.
+
+    ``blocks[i]`` is the dense tile for the i-th stored block; block
+    coordinates are ``(brow[i], bcol[i])`` in block units.  Blocks are sorted
+    row-major ``(brow, bcol)``.
+    """
+
+    shape: Tuple[int, int]          # logical (M, K)
+    block_shape: Tuple[int, int]    # (bm, bk)
+    brow: np.ndarray                # int32 (nblocks,)
+    bcol: np.ndarray                # int32 (nblocks,)
+    blocks: np.ndarray              # float32 (nblocks, bm, bk)
+
+    @property
+    def nblocks(self) -> int:
+        return int(self.brow.shape[0])
+
+    @property
+    def grid(self) -> Tuple[int, int]:
+        bm, bk = self.block_shape
+        return (self.shape[0] + bm - 1) // bm, (self.shape[1] + bk - 1) // bk
+
+    @property
+    def block_density(self) -> float:
+        gm, gk = self.grid
+        return self.nblocks / float(max(gm * gk, 1))
+
+    def block_mask(self) -> np.ndarray:
+        gm, gk = self.grid
+        m = np.zeros((gm, gk), dtype=bool)
+        m[self.brow, self.bcol] = True
+        return m
+
+    def to_dense(self) -> np.ndarray:
+        bm, bk = self.block_shape
+        gm, gk = self.grid
+        out = np.zeros((gm * bm, gk * bk), dtype=self.blocks.dtype)
+        for i in range(self.nblocks):
+            r, c = int(self.brow[i]), int(self.bcol[i])
+            out[r * bm:(r + 1) * bm, c * bk:(c + 1) * bk] = self.blocks[i]
+        return out[: self.shape[0], : self.shape[1]]
+
+    @staticmethod
+    def from_dense(a: np.ndarray, block_shape: Tuple[int, int],
+                   keep_threshold: float = 0.0) -> "BSR":
+        """Tile a dense matrix; keep blocks whose max-abs exceeds threshold."""
+        m, k = a.shape
+        bm, bk = block_shape
+        gm, gk = (m + bm - 1) // bm, (k + bk - 1) // bk
+        pad = np.zeros((gm * bm, gk * bk), dtype=np.float32)
+        pad[:m, :k] = a
+        tiles = pad.reshape(gm, bm, gk, bk).transpose(0, 2, 1, 3)
+        mask = np.abs(tiles).max(axis=(2, 3)) > keep_threshold
+        brow, bcol = np.nonzero(mask)
+        order = np.lexsort((bcol, brow))
+        brow, bcol = brow[order], bcol[order]
+        return BSR(
+            shape=(m, k),
+            block_shape=(bm, bk),
+            brow=brow.astype(np.int32),
+            bcol=bcol.astype(np.int32),
+            blocks=tiles[brow, bcol].astype(np.float32),
+        )
+
+    @staticmethod
+    def random(key: np.random.Generator, shape, block_shape, block_density: float,
+               dtype=np.float32) -> "BSR":
+        m, k = shape
+        bm, bk = block_shape
+        gm, gk = (m + bm - 1) // bm, (k + bk - 1) // bk
+        mask = key.random((gm, gk)) < block_density
+        if not mask.any():  # ensure at least one block
+            mask[key.integers(gm), key.integers(gk)] = True
+        brow, bcol = np.nonzero(mask)
+        blocks = key.standard_normal((brow.size, bm, bk)).astype(dtype)
+        return BSR(shape=(m, k), block_shape=(bm, bk),
+                   brow=brow.astype(np.int32), bcol=bcol.astype(np.int32),
+                   blocks=blocks)
+
+    def row_major_order(self) -> "BSR":
+        order = np.lexsort((self.bcol, self.brow))
+        return BSR(self.shape, self.block_shape, self.brow[order],
+                   self.bcol[order], self.blocks[order])
+
+    def col_major_order(self) -> "BSR":
+        order = np.lexsort((self.brow, self.bcol))
+        return BSR(self.shape, self.block_shape, self.brow[order],
+                   self.bcol[order], self.blocks[order])
+
+
+def random_csr(rng: np.random.Generator, shape, density: float) -> CSR:
+    """Uniform random sparse matrix (iid Bernoulli pattern)."""
+    m, n = shape
+    nnz = max(1, int(round(density * m * n)))
+    # sample without replacement in flat index space
+    flat = rng.choice(m * n, size=min(nnz, m * n), replace=False)
+    rows, cols = flat // n, flat % n
+    vals = rng.standard_normal(rows.size).astype(np.float32)
+    return csr_from_coo((m, n), rows, cols, vals)
+
+
+def spgemm_reference(a: CSR, b: CSR) -> CSR:
+    """Ground-truth C = A @ B via dense numpy (for tests and small sims)."""
+    c = a.to_dense() @ b.to_dense()
+    return CSR.from_dense(c)

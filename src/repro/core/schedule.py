@@ -1,0 +1,356 @@
+"""TPU block-level Segment scheduler.
+
+This is the paper's dynamic dataflow re-grounded at the granularity a TPU can
+exploit (see DESIGN.md §2).  A *work item* is a nonzero-block multiply; the
+scheduler orders the one-dimensional Pallas grid so that **consecutive items
+share operands**, because Pallas only re-fetches a block from HBM when its
+``index_map`` result changes between sequential grid steps (revisiting rule).
+Schedule order therefore *is* the reuse mechanism.
+
+Policies (all compute identical results — only traffic/balance differ):
+
+* ``"gustavson"`` — m-major static order (the best classic static dataflow
+  for SpMM on TPU; paper §II baseline).
+* ``"outer"``     — k-major static order (outer-product-like; B reuse, C
+  thrash).
+* ``"segment"``   — the paper's dynamic order, adapted: output-segment runs
+  (C tile accumulates in VMEM) + SELECTA-style run chaining that greedily
+  matches boundary k's between consecutive runs (B reuse) + serpentine k
+  direction inside runs + :mod:`repro.core.folding` splitting of oversized
+  runs for load balance.
+
+:func:`schedule_traffic` evaluates a schedule under the revisiting model so
+benchmarks can report bytes saved — the TPU analogue of the paper's reuse
+metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .folding import balance_bins, fold_segments
+from .formats import BSR
+
+
+@dataclasses.dataclass
+class SpmmSchedule:
+    """Work list for BSR(A) × dense(B): one item per nonzero A block.
+
+    Arrays all have length ``n_items`` (+1 sentinel where noted):
+
+    * ``a_idx``   — index into ``BSR.blocks`` for the item's A tile
+    * ``m``/``k`` — block coordinates of the item
+    * ``seg_start`` — 1 where the item begins a new output segment (C tile
+      must be zero-initialized), else 0 (accumulate into resident tile)
+    * ``seg_write`` — 1 where the item is the last of its segment (C tile is
+      complete; kernels may use it for fused epilogues)
+    """
+
+    m: np.ndarray
+    k: np.ndarray
+    a_idx: np.ndarray
+    seg_start: np.ndarray
+    seg_write: np.ndarray
+    n_m_blocks: int
+    n_k_blocks: int
+    policy: str
+
+    @property
+    def n_items(self) -> int:
+        return int(self.m.shape[0])
+
+
+def _runs_from_sorted(m_sorted: np.ndarray) -> np.ndarray:
+    """seg_start flags for a list whose equal-m items are contiguous."""
+    if m_sorted.size == 0:
+        return np.zeros(0, dtype=np.int32)
+    starts = np.ones(m_sorted.size, dtype=np.int32)
+    starts[1:] = (m_sorted[1:] != m_sorted[:-1]).astype(np.int32)
+    return starts
+
+
+def _seg_write_from_starts(seg_start: np.ndarray) -> np.ndarray:
+    if seg_start.size == 0:
+        return np.zeros(0, dtype=np.int32)
+    w = np.zeros(seg_start.size, dtype=np.int32)
+    w[:-1] = seg_start[1:]
+    w[-1] = 1
+    return w
+
+
+def _segment_order(m: np.ndarray, k: np.ndarray) -> np.ndarray:
+    """SELECTA-adapted ordering for a bipartite (m,k) item set.
+
+    1. Group items into output runs (same m) — C stationarity.
+    2. Serpentine the k direction inside alternate runs.
+    3. Chain runs greedily: after finishing a run ending at boundary block
+       ``k_end``, pick the unvisited run whose k-set contains ``k_end``
+       (boundary B-block carries over for free), preferring the run with the
+       largest k-overlap with the current one; fall back to the run with the
+       most items (greedy max-occupancy — SELECTA's intra-tile rule).
+
+    Returns a permutation of item indices.
+    """
+    n = m.size
+    if n == 0:
+        return np.zeros(0, dtype=np.int64)
+    base = np.lexsort((k, m))
+    m_s, k_s = m[base], k[base]
+    # run boundaries over sorted-by-m items
+    starts = np.nonzero(_runs_from_sorted(m_s))[0]
+    ends = np.append(starts[1:], n)
+    runs = []  # (item_indices_ascending_k, kset)
+    for s, e in zip(starts, ends):
+        idx = base[s:e]
+        runs.append((idx, set(int(x) for x in k_s[s:e])))
+    n_runs = len(runs)
+    visited = np.zeros(n_runs, dtype=bool)
+    order = []
+    # start from the longest run (greedy max-occupancy)
+    cur = int(np.argmax([len(r[0]) for r in runs]))
+    flip = False
+    for _ in range(n_runs):
+        visited[cur] = True
+        idx, kset = runs[cur]
+        idx_seq = idx[::-1] if flip else idx
+        order.append(idx_seq)
+        k_end = int(k[idx_seq[-1]])
+        # choose the next run: boundary-k match first, largest overlap wins
+        best, best_score = -1, (-1, -1)
+        for j in range(n_runs):
+            if visited[j]:
+                continue
+            _, ks = runs[j]
+            boundary = 1 if k_end in ks else 0
+            overlap = len(kset & ks)
+            score = (boundary, overlap + len(ks) * 1e-9)
+            if score > best_score:
+                best_score, best = score, j
+        if best < 0:
+            # no runs left reachable — pick the biggest remaining
+            rem = np.nonzero(~visited)[0]
+            if rem.size == 0:
+                break
+            best = int(rem[np.argmax([len(runs[j][0]) for j in rem])])
+        nxt_kset = runs[best][1]
+        # serpentine: enter the next run from the matching end
+        nxt_idx = runs[best][0]
+        if k_end in nxt_kset:
+            # flip so the next run *starts* near k_end
+            k_first = int(k[nxt_idx[0]])
+            k_last = int(k[nxt_idx[-1]])
+            flip = abs(k_last - k_end) < abs(k_first - k_end)
+        else:
+            flip = not flip
+        cur = best
+    return np.concatenate(order) if order else np.zeros(0, dtype=np.int64)
+
+
+def build_spmm_schedule(a: BSR, policy: str = "segment",
+                        fold_len: Optional[int] = None) -> SpmmSchedule:
+    """Order the nonzero blocks of A into a kernel work list."""
+    m, k = a.brow.astype(np.int64), a.bcol.astype(np.int64)
+    idx = np.arange(a.nblocks, dtype=np.int64)
+    if policy == "gustavson":
+        order = np.lexsort((k, m))
+    elif policy == "outer":
+        order = np.lexsort((m, k))
+    elif policy == "segment":
+        order = _segment_order(m, k)
+    else:
+        raise ValueError(f"unknown policy {policy!r}")
+    m_o, k_o, idx_o = m[order], k[order], idx[order]
+    seg_start = _runs_from_sorted(m_o)
+    if policy == "segment" and fold_len is not None and fold_len > 0:
+        # temporal folding: cap run length so no single output tile serializes
+        # the pipeline; folded continuations re-start a segment (the kernel
+        # read-modify-writes C on non-first sub-segments).
+        run_pos = np.zeros(m_o.size, dtype=np.int64)
+        cnt = 0
+        for i in range(m_o.size):
+            cnt = 0 if seg_start[i] else cnt + 1
+            run_pos[i] = cnt
+        refold = (run_pos > 0) & (run_pos % fold_len == 0)
+        seg_start = (seg_start.astype(bool) | refold).astype(np.int32)
+    gm, gk = a.grid
+    return SpmmSchedule(m=m_o.astype(np.int32), k=k_o.astype(np.int32),
+                        a_idx=idx_o.astype(np.int32),
+                        seg_start=seg_start.astype(np.int32),
+                        seg_write=_seg_write_from_starts(seg_start),
+                        n_m_blocks=gm, n_k_blocks=gk, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# SpGEMM (BSR × BSR → BSR): symbolic pattern + triple schedule
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SpgemmSchedule:
+    """Work list of (m, k, n) block triples + the symbolic C pattern.
+
+    ``c_idx[i]`` maps item i to its output block slot in the C block array;
+    ``a_idx``/``b_idx`` map into the A/B block arrays.  Triples are ordered in
+    output segments (same C slot contiguous) with k ascending inside, runs
+    chained by the Segment policy on their (c, k) structure.
+    """
+
+    m: np.ndarray
+    n: np.ndarray
+    k: np.ndarray
+    a_idx: np.ndarray
+    b_idx: np.ndarray
+    c_idx: np.ndarray
+    seg_start: np.ndarray
+    seg_write: np.ndarray
+    # symbolic output pattern
+    c_brow: np.ndarray
+    c_bcol: np.ndarray
+    policy: str
+
+    @property
+    def n_items(self) -> int:
+        return int(self.m.shape[0])
+
+    @property
+    def n_c_blocks(self) -> int:
+        return int(self.c_brow.shape[0])
+
+
+def symbolic_spgemm(a_mask: np.ndarray, b_mask: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Block-pattern of C = A@B via boolean matmul. Returns (brow, bcol)."""
+    c_mask = (a_mask.astype(np.int64) @ b_mask.astype(np.int64)) > 0
+    brow, bcol = np.nonzero(c_mask)
+    return brow.astype(np.int32), bcol.astype(np.int32)
+
+
+def build_spgemm_schedule(a: BSR, b: BSR, policy: str = "segment",
+                          fold_len: Optional[int] = None) -> SpgemmSchedule:
+    a_mask, b_mask = a.block_mask(), b.block_mask()
+    c_brow, c_bcol = symbolic_spgemm(a_mask, b_mask)
+    gn = b.grid[1]
+    c_slot = {(int(r), int(c)): i for i, (r, c) in enumerate(zip(c_brow, c_bcol))}
+    a_slot = {(int(r), int(c)): i for i, (r, c) in enumerate(zip(a.brow, a.bcol))}
+    # B indexed by (k, n)
+    b_slot = {(int(r), int(c)): i for i, (r, c) in enumerate(zip(b.brow, b.bcol))}
+    # enumerate triples: for each A block (m,k), each B block (k,n)
+    b_rows = {}
+    for (k_, n_), bi in b_slot.items():
+        b_rows.setdefault(k_, []).append((n_, bi))
+    for k_ in b_rows:
+        b_rows[k_].sort()
+    ms, ns, ks, ais, bis, cis = [], [], [], [], [], []
+    for (m_, k_), ai in a_slot.items():
+        for (n_, bi) in b_rows.get(k_, ()):
+            ms.append(m_); ns.append(n_); ks.append(k_)
+            ais.append(ai); bis.append(bi)
+            cis.append(c_slot[(m_, n_)])
+    m_arr = np.asarray(ms, dtype=np.int64)
+    n_arr = np.asarray(ns, dtype=np.int64)
+    k_arr = np.asarray(ks, dtype=np.int64)
+    a_arr = np.asarray(ais, dtype=np.int64)
+    b_arr = np.asarray(bis, dtype=np.int64)
+    c_arr = np.asarray(cis, dtype=np.int64)
+
+    if policy == "gustavson":           # output-major static: sort by (m, n, k)
+        order = np.lexsort((k_arr, n_arr, m_arr))
+    elif policy == "outer":             # k-major static
+        order = np.lexsort((n_arr, m_arr, k_arr))
+    elif policy == "segment":
+        # treat C slot as the "row" and k as the shared operand → reuse the
+        # SELECTA-adapted run chaining on (c_idx, k)
+        order = _segment_order(c_arr, k_arr)
+    else:
+        raise ValueError(f"unknown policy {policy!r}")
+
+    c_o = c_arr[order]
+    seg_start = _runs_from_sorted(c_o)
+    if policy == "segment" and fold_len is not None and fold_len > 0:
+        run_pos = np.zeros(c_o.size, dtype=np.int64)
+        cnt = 0
+        for i in range(c_o.size):
+            cnt = 0 if seg_start[i] else cnt + 1
+            run_pos[i] = cnt
+        refold = (run_pos > 0) & (run_pos % fold_len == 0)
+        seg_start = (seg_start.astype(bool) | refold).astype(np.int32)
+
+    return SpgemmSchedule(
+        m=m_arr[order].astype(np.int32), n=n_arr[order].astype(np.int32),
+        k=k_arr[order].astype(np.int32), a_idx=a_arr[order].astype(np.int32),
+        b_idx=b_arr[order].astype(np.int32), c_idx=c_o.astype(np.int32),
+        seg_start=seg_start.astype(np.int32),
+        seg_write=_seg_write_from_starts(seg_start.astype(np.int32)),
+        c_brow=c_brow, c_bcol=c_bcol, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# Traffic model under Pallas revisiting semantics
+# ---------------------------------------------------------------------------
+
+
+def spmm_schedule_traffic(sched: SpmmSchedule, bm: int, bk: int, n_cols: int,
+                          bytes_per_el: int = 4) -> dict:
+    """HBM bytes for a 1-D grid SpMM kernel under revisiting semantics.
+
+    Per step: A tile always fetched (distinct blocks); B row-block fetched iff
+    ``k`` differs from the previous step; C row written at the end of each
+    segment, and read back (accumulated) when a segment re-starts a C row that
+    was already written (folding continuation or non-contiguous revisit).
+    """
+    a_bytes = sched.n_items * bm * bk * bytes_per_el
+    k_delta = np.ones(sched.n_items, dtype=bool)
+    if sched.n_items > 1:
+        k_delta[1:] = sched.k[1:] != sched.k[:-1]
+    b_bytes = int(k_delta.sum()) * bk * n_cols * bytes_per_el
+    seg_heads = np.nonzero(sched.seg_start)[0]
+    c_writes = seg_heads.size
+    seen = set()
+    c_reads = 0
+    for h in seg_heads:
+        mm = int(sched.m[h])
+        if mm in seen:
+            c_reads += 1
+        seen.add(mm)
+    c_bytes = (c_writes + c_reads) * bm * n_cols * bytes_per_el
+    total = a_bytes + b_bytes + c_bytes
+    return dict(a_bytes=a_bytes, b_bytes=b_bytes, c_bytes=c_bytes, total=total,
+                b_fetches=int(k_delta.sum()), c_segments=int(c_writes))
+
+
+def spgemm_schedule_traffic(sched: SpgemmSchedule, bm: int, bk: int, bn: int,
+                            bytes_per_el: int = 4) -> dict:
+    """Same revisiting model for the BSR×BSR kernel (tiles all block-sized)."""
+    n_items = sched.n_items
+    a_delta = np.ones(n_items, dtype=bool)
+    b_delta = np.ones(n_items, dtype=bool)
+    if n_items > 1:
+        a_delta[1:] = sched.a_idx[1:] != sched.a_idx[:-1]
+        b_delta[1:] = sched.b_idx[1:] != sched.b_idx[:-1]
+    a_bytes = int(a_delta.sum()) * bm * bk * bytes_per_el
+    b_bytes = int(b_delta.sum()) * bk * bn * bytes_per_el
+    seg_heads = np.nonzero(sched.seg_start)[0]
+    seen = set()
+    c_reads = 0
+    for h in seg_heads:
+        ci = int(sched.c_idx[h])
+        if ci in seen:
+            c_reads += 1
+        seen.add(ci)
+    c_bytes = (seg_heads.size + c_reads) * bm * bn * bytes_per_el
+    total = a_bytes + b_bytes + c_bytes
+    return dict(a_bytes=a_bytes, b_bytes=b_bytes, c_bytes=c_bytes, total=total,
+                b_fetches=int(b_delta.sum()), c_segments=int(seg_heads.size))
+
+
+def shard_schedule(sizes: np.ndarray, n_shards: int, policy: str = "segment"):
+    """Partition per-item work across devices/lanes.
+
+    ``segment`` uses folding's LPT balancing; static policies use round-robin.
+    Returns (assignment, imbalance stats) — see :mod:`repro.core.folding`.
+    """
+    from .folding import round_robin_bins
+    if policy == "segment":
+        return balance_bins(sizes, n_shards)
+    return round_robin_bins(sizes, n_shards)

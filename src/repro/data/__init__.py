@@ -1,0 +1,3 @@
+from .pipeline import SyntheticDataset
+
+__all__ = ["SyntheticDataset"]

@@ -1,0 +1,75 @@
+"""Deterministic synthetic data pipeline — sharded, checkpointable, elastic.
+
+Every token is a pure function of ``(seed, step, batch_index, position)``
+via a counter-based hash, which gives the fault-tolerance properties the
+runtime relies on:
+
+* **checkpointable** — the pipeline state is just the step counter;
+* **straggler/elastic-safe** — any host can (re)compute any shard of any
+  step without coordination, so work can be re-assigned freely after a
+  failure or a re-mesh (DESIGN.md §5).
+
+For the VLM/audio stubs the frontend embeddings are generated with the same
+counter hashing (deterministic float stand-ins for patch/frame features).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+
+def _hash_u32(x: np.ndarray) -> np.ndarray:
+    """splitmix-ish counter hash, vectorized, uint64 → uint32."""
+    x = x.astype(np.uint64)
+    x = (x ^ (x >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    x = (x ^ (x >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    x = x ^ (x >> np.uint64(31))
+    return (x & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+
+
+@dataclasses.dataclass
+class SyntheticDataset:
+    cfg: ModelConfig
+    shape: ShapeConfig
+    seed: int = 1234
+
+    def _tokens(self, step: int, rows: np.ndarray, t: int) -> np.ndarray:
+        pos = np.arange(t, dtype=np.uint64)[None, :]
+        ctr = (np.uint64(self.seed) * np.uint64(1_000_003)
+               + np.uint64(step) * np.uint64(1 << 40)
+               + rows[:, None].astype(np.uint64) * np.uint64(1 << 20) + pos)
+        return (_hash_u32(ctr) % np.uint32(self.cfg.vocab)).astype(np.int32)
+
+    def batch(self, step: int, *, shard: Optional[slice] = None) -> Dict[str, np.ndarray]:
+        """Full (or row-sliced) global batch for ``step``."""
+        b = self.shape.global_batch
+        rows = np.arange(b, dtype=np.int64)
+        if shard is not None:
+            rows = rows[shard]
+        t = self.shape.seq_len
+        n_front = self.cfg.n_frontend_tokens if self.cfg.family in ("vlm",) else 0
+        t_text = t - n_front
+        toks = self._tokens(step, rows, t_text + 1)
+        out: Dict[str, np.ndarray] = {
+            "tokens": toks[:, :-1],
+            "targets": toks[:, 1:],
+        }
+        if self.cfg.family == "vlm":
+            out["vis_embeds"] = self._embeds(step, rows, self.cfg.n_frontend_tokens)
+        if self.cfg.family == "enc_dec":
+            out["enc_embeds"] = self._embeds(step, rows, self.cfg.n_frontend_tokens)
+        return out
+
+    def _embeds(self, step: int, rows: np.ndarray, n: int) -> np.ndarray:
+        d = self.cfg.d_model
+        ctr = (np.uint64(self.seed) ^ np.uint64(0xE5)) + \
+            np.uint64(step) * np.uint64(1 << 34) + \
+            (rows[:, None, None].astype(np.uint64) * np.uint64(n * d)
+             + np.arange(n, dtype=np.uint64)[None, :, None] * np.uint64(d)
+             + np.arange(d, dtype=np.uint64)[None, None, :])
+        u = _hash_u32(ctr).astype(np.float32) / np.float32(2 ** 32)
+        return ((u - 0.5) * 0.2).astype(np.float32)

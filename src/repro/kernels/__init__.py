@@ -1,0 +1,14 @@
+"""Pallas TPU kernels for the Segment dataflow + architecture hot spots.
+
+Each kernel module pairs with a pure-jnp oracle in :mod:`repro.kernels.ref`;
+:mod:`repro.kernels.ops` exposes the jit'd public wrappers (interpret mode
+auto-selected on CPU).
+"""
+from . import ops, ref
+from .ops import (INTERPRET, SpgemmPlan, SpmmPlan, flash_mha, moe_apply,
+                  plan_spgemm, plan_spmm, rg_lru_scan)
+
+__all__ = [
+    "ops", "ref", "INTERPRET", "SpgemmPlan", "SpmmPlan", "flash_mha",
+    "moe_apply", "plan_spgemm", "plan_spmm", "rg_lru_scan",
+]

@@ -1,0 +1,238 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``INTERPRET`` auto-selects Pallas interpret mode on CPU (this container) and
+compiled mode on TPU.  Schedule construction (numpy, per sparsity pattern)
+happens once in :func:`plan_spmm` / :func:`plan_spgemm`; the returned plans
+hold device arrays and are reusable across calls — static weight-sparsity
+patterns amortize exactly as DESIGN.md §2 argues.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import BSR
+from repro.core.schedule import (build_spgemm_schedule, build_spmm_schedule,
+                                 spgemm_schedule_traffic, spmm_schedule_traffic)
+from . import ref
+from .flash_attention import flash_attention
+from .moe_gemm import build_moe_chunks, moe_gemm
+from .rg_lru import rg_lru
+from .segment_spgemm import segment_spgemm
+from .segment_spmm import segment_spmm
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+INTERPRET = _default_interpret()
+
+
+# ---------------------------------------------------------------------------
+# SpMM plan (sparse-weight layers)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SpmmPlan:
+    """Frozen Segment schedule + schedule-ordered blocks for BSR(A) @ B."""
+
+    blocks: jax.Array        # (n_items, bm, bk) schedule order
+    m_idx: jax.Array
+    k_idx: jax.Array
+    seg_start: jax.Array
+    seg_write: jax.Array
+    accum_prev: jax.Array
+    grid_m: int
+    grid_k: int
+    block_shape: tuple
+    policy: str
+    traffic: dict            # revisiting-model traffic estimate
+    row_mask: jax.Array = None  # (grid_m,) 1.0 where the block row has work
+
+    def __call__(self, b_dense, *, bn: int = 512, interpret: Optional[bool] = None,
+                 out_dtype=jnp.float32):
+        interpret = INTERPRET if interpret is None else interpret
+        n = b_dense.shape[1]
+        bn = min(bn, n)
+        out = segment_spmm(
+            self.blocks, self.m_idx, self.k_idx, self.seg_start,
+            self.seg_write, self.accum_prev, b_dense,
+            grid_m=self.grid_m, bn=bn, interpret=interpret, out_dtype=out_dtype)
+        # block rows with no nonzero A blocks are never visited by the grid —
+        # their output is undefined (may be NaN); zero them via where.
+        bm = self.block_shape[0]
+        live = jnp.repeat(self.row_mask > 0, bm)[:, None]
+        return jnp.where(live, out, jnp.zeros((), out.dtype))
+
+
+def plan_spmm(a: BSR, policy: str = "segment", n_cols_hint: int = 1024,
+              fold_len: Optional[int] = None) -> SpmmPlan:
+    sched = build_spmm_schedule(a, policy=policy, fold_len=fold_len)
+    # accum_prev: a segment head whose m was already written must merge
+    seen = set()
+    accum_prev = np.zeros(sched.n_items, dtype=np.int32)
+    for i in np.nonzero(sched.seg_start)[0]:
+        m = int(sched.m[i])
+        accum_prev[i] = 1 if m in seen else 0
+        seen.add(m)
+    bm, bk = a.block_shape
+    row_mask = np.zeros(sched.n_m_blocks, dtype=np.float32)
+    row_mask[np.unique(sched.m)] = 1.0
+    return SpmmPlan(
+        blocks=jnp.asarray(a.blocks[sched.a_idx]),
+        m_idx=jnp.asarray(sched.m), k_idx=jnp.asarray(sched.k),
+        seg_start=jnp.asarray(sched.seg_start),
+        seg_write=jnp.asarray(sched.seg_write),
+        accum_prev=jnp.asarray(accum_prev),
+        grid_m=sched.n_m_blocks, grid_k=sched.n_k_blocks,
+        block_shape=a.block_shape, policy=policy,
+        traffic=spmm_schedule_traffic(sched, bm, bk, n_cols_hint),
+        row_mask=jnp.asarray(row_mask))
+
+
+# ---------------------------------------------------------------------------
+# SpGEMM plan
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SpgemmPlan:
+    a_blocks: jax.Array
+    b_blocks: jax.Array
+    a_idx: jax.Array
+    b_idx: jax.Array
+    c_idx: jax.Array
+    seg_start: jax.Array
+    seg_write: jax.Array
+    accum_prev: jax.Array
+    c_brow: np.ndarray
+    c_bcol: np.ndarray
+    n_c_blocks: int
+    policy: str
+    traffic: dict
+
+    def __call__(self, *, interpret: Optional[bool] = None, out_dtype=jnp.float32):
+        interpret = INTERPRET if interpret is None else interpret
+        return segment_spgemm(
+            self.a_blocks, self.b_blocks, self.a_idx, self.b_idx, self.c_idx,
+            self.seg_start, self.seg_write, self.accum_prev,
+            n_c_blocks=self.n_c_blocks, interpret=interpret,
+            out_dtype=out_dtype)
+
+
+def plan_spgemm(a: BSR, b: BSR, policy: str = "segment",
+                fold_len: Optional[int] = None) -> SpgemmPlan:
+    sched = build_spgemm_schedule(a, b, policy=policy, fold_len=fold_len)
+    seen = set()
+    accum_prev = np.zeros(sched.n_items, dtype=np.int32)
+    for i in np.nonzero(sched.seg_start)[0]:
+        ci = int(sched.c_idx[i])
+        accum_prev[i] = 1 if ci in seen else 0
+        seen.add(ci)
+    bm, bk = a.block_shape
+    bn = b.block_shape[1]
+    return SpgemmPlan(
+        a_blocks=jnp.asarray(a.blocks), b_blocks=jnp.asarray(b.blocks),
+        a_idx=jnp.asarray(sched.a_idx), b_idx=jnp.asarray(sched.b_idx),
+        c_idx=jnp.asarray(sched.c_idx),
+        seg_start=jnp.asarray(sched.seg_start),
+        seg_write=jnp.asarray(sched.seg_write),
+        accum_prev=jnp.asarray(accum_prev),
+        c_brow=sched.c_brow, c_bcol=sched.c_bcol,
+        n_c_blocks=sched.n_c_blocks, policy=policy,
+        traffic=spgemm_schedule_traffic(sched, bm, bk, bn))
+
+
+# ---------------------------------------------------------------------------
+# Attention / recurrences / MoE
+# ---------------------------------------------------------------------------
+
+
+def flash_mha(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+              bq: int = 128, bkv: int = 128, interpret: Optional[bool] = None):
+    """GQA flash attention. q: (B, Tq, H, D), k/v: (B, Tk, Hkv, D)."""
+    interpret = INTERPRET if interpret is None else interpret
+    b, tq, h, d = q.shape
+    tk, hkv = k.shape[1], k.shape[2]
+    rep = h // hkv
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qh = q.transpose(0, 2, 1, 3).reshape(b * h, tq, d)
+    kh = k.transpose(0, 2, 1, 3).reshape(b * h, tk, d)
+    vh = v.transpose(0, 2, 1, 3).reshape(b * h, tk, d)
+    # pad Tq/Tk (at the end) to block multiples; real queries keep their
+    # absolute positions via the explicit offset, padded keys are masked by
+    # kv_len, padded query rows are sliced off.
+    bq_eff = min(bq, max(8, 1 << max(tq - 1, 0).bit_length()))
+    bkv_eff = min(bkv, max(128, 1 << max(tk - 1, 0).bit_length()))
+    pad_q = (-tq) % bq_eff
+    pad_k = (-tk) % bkv_eff
+    if pad_q:
+        qh = jnp.pad(qh, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        kh = jnp.pad(kh, ((0, 0), (0, pad_k), (0, 0)))
+        vh = jnp.pad(vh, ((0, 0), (0, pad_k), (0, 0)))
+    out = flash_attention(qh, kh, vh, causal=causal, window=window,
+                          offset=tk - tq, kv_len=tk,
+                          bq=bq_eff, bkv=bkv_eff, interpret=interpret)
+    out = out[:, :tq, :]
+    return out.reshape(b, h, tq, d).transpose(0, 2, 1, 3)
+
+
+def rg_lru_scan(x, a_gate, x_gate, a_param, h0=None, *, ct: int = 128,
+                interpret: Optional[bool] = None):
+    interpret = INTERPRET if interpret is None else interpret
+    if h0 is None:
+        h0 = jnp.zeros((x.shape[0], x.shape[2]), jnp.float32)
+    return rg_lru(x, a_gate, x_gate, a_param, h0, ct=min(ct, x.shape[1]),
+                  interpret=interpret)
+
+
+def moe_apply(x, w_up, w_down, router_logits, *, top_k: int = 1,
+              chunk_rows: int = 128, capacity_factor: float = 1.25,
+              activation=jax.nn.silu, interpret: Optional[bool] = None):
+    """Full MoE FFN: route → Segment-sort → grouped GEMMs → unsort-combine.
+
+    x: (T, d_model); w_up: (E, d_model, d_ff); w_down: (E, d_ff, d_model).
+    Returns (T, d_model).
+    """
+    interpret = INTERPRET if interpret is None else interpret
+    t, d_model = x.shape
+    n_exp = w_up.shape[0]
+    top_vals, top_idx = jax.lax.top_k(router_logits, top_k)      # (T, top_k)
+    gates = jax.nn.softmax(top_vals, axis=-1)
+    out = jnp.zeros((t, d_model), jnp.float32)
+    for j in range(top_k):
+        expert = top_idx[:, j]
+        order, slot, chunk_expert, keep, n_chunks, cap_rows = build_moe_chunks(
+            expert, n_exp, chunk_rows, capacity_factor)
+        cap_total = n_exp * cap_rows
+        # scatter tokens (sorted by expert) into the padded chunk buffer;
+        # dropped tokens land on the trash row which is cut before the GEMM
+        buf = jnp.zeros((cap_total + 1, d_model), x.dtype)
+        buf = buf.at[slot].set(jnp.where(keep[:, None], x[order], 0))
+        buf = buf[:-1]
+        h = moe_gemm(buf, w_up, chunk_expert, chunk_rows=chunk_rows,
+                     interpret=interpret)
+        h = activation(h).astype(x.dtype)
+        y = moe_gemm(h, w_down, chunk_expert, chunk_rows=chunk_rows,
+                     interpret=interpret)
+        # gather back: sorted position s ↔ original token order[s]
+        vals = jnp.where(keep[:, None],
+                         y[jnp.minimum(slot, cap_total - 1)], 0.0)
+        y_tok = jnp.zeros((t, d_model), jnp.float32).at[order].set(vals)
+        out = out + y_tok * gates[:, j][:, None]
+    return out
+
+
+__all__ = [
+    "INTERPRET", "SpmmPlan", "SpgemmPlan", "plan_spmm", "plan_spgemm",
+    "flash_mha", "rg_lru_scan", "moe_apply", "ref",
+]

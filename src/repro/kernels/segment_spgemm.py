@@ -1,0 +1,88 @@
+"""Segment-scheduled BSR × BSR → BSR SpGEMM — Pallas TPU.
+
+Two-phase TPU adaptation of SEGMENTBC (§III-B): the *symbolic* phase
+(``repro.core.schedule.symbolic_spgemm``) computes C's block pattern ahead of
+time — the V-space becomes a static compressed coordinate list at block
+granularity — and this *numeric* kernel executes the (m, k, n) block triples
+in Segment order:
+
+* triples of the same C block form contiguous segments (ordered accumulation
+  in VMEM, written back once — the merge network's in-place reduction);
+* segment-to-segment chaining reuses boundary B blocks (SELECTA);
+* folded continuations (``accum_prev``) read-modify-write their C block —
+  temporal folding's partial-sum merge.
+
+Grid: ``(n_items,)``; every operand is a single block per step, selected by
+scalar-prefetched index arrays (the ahead-of-time IPM).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(a_idx, b_idx, c_idx, seg_start, seg_write, accum_prev,
+            a_blocks, b_blocks, out, acc):
+    i = pl.program_id(0)
+
+    @pl.when(seg_start[i] == 1)
+    def _init():
+        @pl.when(accum_prev[i] == 1)
+        def _load():
+            acc[...] = out[0].astype(jnp.float32)
+
+        @pl.when(accum_prev[i] == 0)
+        def _zero():
+            acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jax.lax.dot_general(
+        a_blocks[0].astype(jnp.float32), b_blocks[0].astype(jnp.float32),
+        dimension_numbers=(((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(seg_write[i] == 1)
+    def _write():
+        out[0] = acc[...].astype(out.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("n_c_blocks", "interpret", "out_dtype"))
+def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
+                   seg_write, accum_prev, *, n_c_blocks: int,
+                   interpret: bool = False, out_dtype=jnp.float32):
+    """Numeric SpGEMM phase.
+
+    Args:
+      a_blocks: (na, bm, bk) BSR A tiles (original order).
+      b_blocks: (nb, bk, bn) BSR B tiles (original order).
+      a_idx/b_idx/c_idx: (n_items,) int32 — triple → block-slot maps.
+      seg_start/seg_write/accum_prev: (n_items,) int32 schedule flags.
+      n_c_blocks: number of symbolic C blocks.
+    Returns:
+      (n_c_blocks, bm, bn) C blocks, ordered as the symbolic pattern.
+    """
+    n_items = a_idx.shape[0]
+    bm, bk = a_blocks.shape[1:]
+    bn = b_blocks.shape[2]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=6,
+        grid=(n_items,),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda i, ai, bi, ci, s, w, p: (ai[i], 0, 0)),
+            pl.BlockSpec((1, bk, bn), lambda i, ai, bi, ci, s, w, p: (bi[i], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda i, ai, bi, ci, s, w, p: (ci[i], 0, 0)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_c_blocks, bm, bn), out_dtype),
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("arbitrary",)),
+    )(a_idx, b_idx, c_idx, seg_start, seg_write, accum_prev, a_blocks, b_blocks)

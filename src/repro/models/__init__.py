@@ -1,0 +1,6 @@
+"""Model zoo: the 10 assigned architectures on a unified transformer stack."""
+from .model import abstract_params, build_model, cache_specs, input_specs
+from .transformer import Transformer
+
+__all__ = ["abstract_params", "build_model", "cache_specs", "input_specs",
+           "Transformer"]

@@ -1,0 +1,60 @@
+"""Model construction + abstract input specs for every (arch × shape) cell."""
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from .transformer import Transformer
+
+
+def build_model(cfg: ModelConfig) -> Transformer:
+    return Transformer(cfg)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of the cell.
+
+    The modality frontends are stubs per the assignment: ``vis_embeds`` /
+    ``enc_embeds`` are precomputed patch/frame embeddings.
+    """
+    b = shape.global_batch
+    t = shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    if shape.kind == "decode":
+        return {
+            "token": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((), i32),
+        }
+
+    specs: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.family == "vlm":
+        nv = cfg.n_frontend_tokens
+        specs["vis_embeds"] = jax.ShapeDtypeStruct((b, nv, cfg.d_model), f32)
+        t_text = t - nv
+    elif cfg.family == "enc_dec":
+        specs["enc_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_frontend_tokens, cfg.d_model), f32)
+        t_text = t
+    else:
+        t_text = t
+    specs["tokens"] = jax.ShapeDtypeStruct((b, t_text), i32)
+    if shape.kind == "train":
+        specs["targets"] = jax.ShapeDtypeStruct((b, t_text), i32)
+    return specs
+
+
+def cache_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """Abstract decode-cache pytree (no allocation) via eval_shape."""
+    model = build_model(cfg)
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+
+
+def abstract_params(cfg: ModelConfig):
+    model = build_model(cfg)
+    return jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))

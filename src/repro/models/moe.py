@@ -1,0 +1,97 @@
+"""Mixture-of-Experts layer — Segment-scheduled dispatch.
+
+Routing produces the data-dependent block-sparse structure the Segment
+dataflow targets (DESIGN.md §4): tokens sort by expert (SELECTA's
+shared-operand grouping), oversized groups fold into fixed-capacity buffers
+(spatial folding → load balance), and the expert GEMM runs either as
+
+* the **train path**: a batched einsum over (B, E, cap, d) dispatch buffers —
+  pure jnp, differentiable, identical FLOPs to a grouped GEMM; or
+* the **serve path**: the Pallas grouped kernel (:mod:`repro.kernels.moe_gemm`).
+
+Sharding: dispatch is *per batch row* — the token dim of each dispatch is
+local to its dp shard (capacity is enforced per dp-group, the standard
+production semantics), so no global gathers/scatters cross devices; the
+expert dim is constrained to the model axis (expert parallelism).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.sharding import act_constrain
+from . import layers
+
+
+def moe_init(key, d_model, d_ff, n_experts, dtype=jnp.float32):
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s_in = 1.0 / jnp.sqrt(d_model)
+    s_ff = 1.0 / jnp.sqrt(d_ff)
+    return {
+        "router": layers.dense_init(k1, d_model, n_experts, dtype=dtype),
+        "gate": jax.random.normal(k2, (n_experts, d_model, d_ff), dtype) * s_in,
+        "up": jax.random.normal(k3, (n_experts, d_model, d_ff), dtype) * s_in,
+        "down": jax.random.normal(k4, (n_experts, d_ff, d_model), dtype) * s_ff,
+    }
+
+
+def _dispatch_batched(x, expert, n_exp: int, cap: int):
+    """Per-row expert dispatch. x: (B, T, D); expert: (B, T) int32.
+
+    Returns (buf (B, E, cap, D), slot (B, T), keep (B, T)) where
+    buf[b, e, c] holds the c-th token of row b routed to expert e (zeros
+    beyond each expert's count; overflow beyond ``cap`` dropped)."""
+    b, t, d = x.shape
+    order = jnp.argsort(expert, axis=-1)                       # (B, T)
+    sorted_e = jnp.take_along_axis(expert, order, axis=-1)
+    pos_in_e = (jnp.arange(t)[None, :]
+                - jax.vmap(lambda se: jnp.searchsorted(se, se, side="left"))(
+                    sorted_e))
+    keep_sorted = pos_in_e < cap
+    slot_sorted = jnp.where(keep_sorted, sorted_e * cap + pos_in_e, n_exp * cap)
+    x_sorted = jnp.take_along_axis(x, order[..., None], axis=1)
+    buf = jnp.zeros((b, n_exp * cap + 1, d), x.dtype)
+    buf = jax.vmap(lambda bu, sl, va: bu.at[sl].set(va))(
+        buf, slot_sorted, jnp.where(keep_sorted[..., None], x_sorted, 0))
+    # undo the sort for slot/keep so they index original token positions
+    inv = jnp.argsort(order, axis=-1)
+    slot = jnp.take_along_axis(slot_sorted, inv, axis=-1)
+    keep = jnp.take_along_axis(keep_sorted, inv, axis=-1)
+    return buf[:, :-1].reshape(b, n_exp, cap, d), slot, keep
+
+
+def moe_apply(p, x, *, top_k: int, capacity_factor: float = 1.25,
+              chunk_rows: int = 128):
+    """x: (B, T, D) → (out (B, T, D), aux_loss scalar)."""
+    b, t, d = x.shape
+    n_exp = p["router"]["w"].shape[1]
+    cap = max(1, int(np.ceil(t * capacity_factor / n_exp)))
+    logits = layers.dense_apply(p["router"], x.astype(jnp.float32))  # (B,T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_vals, top_idx = jax.lax.top_k(logits, top_k)
+    gates = jax.nn.softmax(top_vals, axis=-1)                        # (B,T,k)
+
+    # Switch-style load-balance auxiliary loss (over all tokens)
+    me = probs.reshape(-1, n_exp).mean(axis=0)
+    ce = jnp.zeros(n_exp).at[top_idx[..., 0].reshape(-1)].add(1.0) / (b * t)
+    aux = n_exp * jnp.sum(me * ce)
+
+    out = jnp.zeros((b, t, d), jnp.float32)
+    for j in range(top_k):
+        buf, slot, keep = _dispatch_batched(x, top_idx[..., j], n_exp, cap)
+        eb = act_constrain(buf, "expert")                 # (B, E, cap, D)
+        h = (jax.nn.silu(jnp.einsum("becd,edf->becf", eb,
+                                    p["gate"].astype(x.dtype)))
+             * jnp.einsum("becd,edf->becf", eb, p["up"].astype(x.dtype)))
+        h = act_constrain(h, "expert")
+        y = act_constrain(
+            jnp.einsum("becf,efd->becd", h, p["down"].astype(x.dtype)),
+            "expert")
+        y = y.reshape(b, n_exp * cap, d)
+        vals = jax.vmap(lambda yy, sl: yy[jnp.minimum(sl, yy.shape[0] - 1)])(
+            y, slot)
+        y_tok = jnp.where(keep[..., None], vals, 0.0)
+        out = out + y_tok.astype(jnp.float32) * gates[..., j][..., None]
+    return out.astype(x.dtype), aux

@@ -1,0 +1,364 @@
+"""Unified transformer family: one implementation, ten architectures.
+
+Families (``ModelConfig.family``):
+* ``dense`` / ``vlm`` / ``audio-as-decoder`` — GQA attention + SwiGLU (or
+  block-sparse Segment) FFN, scanned over layers;
+* ``moe``    — GQA attention + Segment-dispatched MoE FFN;
+* ``hybrid`` — RecurrentGemma: repeating (rec, rec, local-attention) units;
+* ``ssm``    — RWKV-6 time-mix/channel-mix;
+* ``enc_dec``— Whisper backbone: bidirectional encoder over frame embeddings
+  (frontend stubbed per spec) + causal decoder with cross-attention.
+
+Params are pytrees with layer-stacked leaves; layer iteration is
+``lax.scan`` (+ optional remat) so the HLO stays compact for the 512-chip
+dry-run even at 64 layers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.sharding import act_constrain
+from . import layers, moe, recurrent
+from .sparse_ffn import SparseMLP
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _sparse_mlp_params(key, sm: SparseMLP, dtype):
+    """Fresh trainable blocks for the *shared* sparse schedule (all layers
+    prune to the same block pattern; only values differ)."""
+    def pb(k, lin):
+        n = len(lin.fwd_s.perm)
+        bm, bk = lin.fwd_s.bm, lin.fwd_s.bk
+        return {"blocks": jax.random.normal(k, (n, bm, bk), dtype)
+                / np.sqrt(lin.d_in)}
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {"up": pb(k1, sm.up), "gate": pb(k2, sm.gate),
+            "down": pb(k3, sm.down)}
+
+
+# ---------------------------------------------------------------------------
+# per-kind block init / apply
+# ---------------------------------------------------------------------------
+
+
+def _block_init(cfg: ModelConfig, key, kind: str, sparse_mlp: Optional[SparseMLP]):
+    dt = jnp.float32
+    d = cfg.d_model
+    p: Dict[str, Any] = {"norm1": layers.rmsnorm_init(d), "norm2": layers.rmsnorm_init(d)}
+    k1, k2 = jax.random.split(key)
+    if kind in ("attn", "attn_bidir", "local", "cross"):
+        p["attn"] = layers.attention_init(k1, d, cfg.n_heads, cfg.n_kv, cfg.hd,
+                                          qkv_bias=cfg.qkv_bias, dtype=dt)
+        if kind == "cross":
+            p["norm_x"] = layers.rmsnorm_init(d)
+            p["xattn"] = layers.attention_init(
+                jax.random.fold_in(k1, 1), d, cfg.n_heads, cfg.n_kv, cfg.hd,
+                qkv_bias=cfg.qkv_bias, dtype=dt)
+        if sparse_mlp is not None:
+            p["mlp"] = _sparse_mlp_params(k2, sparse_mlp, dt)
+        else:
+            p["mlp"] = layers.swiglu_init(k2, d, cfg.d_ff, dtype=dt)
+    elif kind == "moe":
+        p["attn"] = layers.attention_init(k1, d, cfg.n_heads, cfg.n_kv, cfg.hd,
+                                          qkv_bias=cfg.qkv_bias, dtype=dt)
+        p["moe"] = moe.moe_init(k2, d, cfg.d_ff, cfg.n_experts, dtype=dt)
+    elif kind == "rec":
+        p["rec"] = recurrent.rglru_block_init(k1, d, dtype=dt)
+        p["mlp"] = layers.swiglu_init(k2, d, cfg.d_ff, dtype=dt)
+    elif kind == "rwkv":
+        p = {"norm1": layers.rmsnorm_init(d), "norm2": layers.rmsnorm_init(d),
+             "rwkv": recurrent.rwkv_block_init(k1, d, cfg.n_heads or 32,
+                                               cfg.d_ff, dtype=dt)}
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _block_apply(cfg: ModelConfig, p, x, kind: str, *, positions,
+                 sparse_mlp: Optional[SparseMLP], enc_out=None,
+                 cache=None, cache_pos=None):
+    """Returns (x, aux_loss, new_cache)."""
+    if cfg.seq_shard and cache is None:
+        x = act_constrain(x, "seq")
+    aux = jnp.zeros((), jnp.float32)
+    new_cache: Dict[str, Any] = {}
+    if kind in ("attn", "attn_bidir", "local", "cross"):
+        window = cfg.local_window if kind == "local" else None
+        h, kv = layers.attention_apply(
+            p["attn"], layers.rmsnorm_apply(p["norm1"], x, cfg.norm_eps),
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+            positions=positions, causal=(kind != "attn_bidir"), window=window,
+            rope_theta=cfg.rope_theta,
+            cache=cache.get("kv") if cache else None, cache_pos=cache_pos,
+            chunk=cfg.attn_chunk, ring=(kind == "local" and cache is not None))
+        x = x + h
+        if kv is not None:
+            new_cache["kv"] = kv
+        if kind == "cross":
+            hx, xkv = layers.attention_apply(
+                p["xattn"], layers.rmsnorm_apply(p["norm_x"], x, cfg.norm_eps),
+                n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+                positions=positions, causal=False, rope_theta=0.0,
+                kv_ctx=enc_out, chunk=cfg.attn_chunk)
+            x = x + hx
+        n2 = layers.rmsnorm_apply(p["norm2"], x, cfg.norm_eps)
+        if sparse_mlp is not None:
+            x = x + sparse_mlp.apply(p["mlp"], n2)
+        else:
+            x = x + layers.swiglu_apply(p["mlp"], n2)
+    elif kind == "moe":
+        h, kv = layers.attention_apply(
+            p["attn"], layers.rmsnorm_apply(p["norm1"], x, cfg.norm_eps),
+            n_heads=cfg.n_heads, n_kv=cfg.n_kv, head_dim=cfg.hd,
+            positions=positions, causal=True, rope_theta=cfg.rope_theta,
+            cache=cache.get("kv") if cache else None, cache_pos=cache_pos,
+            chunk=cfg.attn_chunk)
+        x = x + h
+        if kv is not None:
+            new_cache["kv"] = kv
+        h, aux = moe.moe_apply(
+            p["moe"], layers.rmsnorm_apply(p["norm2"], x, cfg.norm_eps),
+            top_k=cfg.top_k, capacity_factor=cfg.moe_capacity_factor)
+        x = x + h
+    elif kind == "rec":
+        h, st = recurrent.rglru_block_apply(
+            p["rec"], layers.rmsnorm_apply(p["norm1"], x, cfg.norm_eps),
+            state=cache.get("rec") if cache else None)
+        x = x + h
+        new_cache["rec"] = st
+        x = x + layers.swiglu_apply(
+            p["mlp"], layers.rmsnorm_apply(p["norm2"], x, cfg.norm_eps))
+    elif kind == "rwkv":
+        st = cache.get("rwkv") if cache else recurrent.rwkv_block_state(
+            x.shape[0], cfg.d_model, cfg.n_heads or 32, x.dtype)
+        h, st_tm = recurrent.rwkv_time_mix(
+            p["rwkv"], layers.rmsnorm_apply(p["norm1"], x, cfg.norm_eps),
+            cfg.n_heads or 32, {"shift": st["shift"], "S": st["S"]})
+        x = x + h
+        h, cm_shift = recurrent.rwkv_channel_mix(
+            p["rwkv"], layers.rmsnorm_apply(p["norm2"], x, cfg.norm_eps),
+            st["cm_shift"])
+        x = x + h
+        new_cache["rwkv"] = {"shift": st_tm["shift"], "S": st_tm["S"],
+                             "cm_shift": cm_shift}
+    else:
+        raise ValueError(kind)
+    return x, aux, new_cache
+
+
+def _block_cache_init(cfg: ModelConfig, kind: str, b: int, t_max: int, dt):
+    def kv(t_len):
+        if cfg.kv_cache_dtype == "int8":
+            return {"k": jnp.zeros((b, t_len, cfg.n_kv, cfg.hd), jnp.int8),
+                    "v": jnp.zeros((b, t_len, cfg.n_kv, cfg.hd), jnp.int8),
+                    "k_s": jnp.zeros((b, t_len, cfg.n_kv), jnp.float32),
+                    "v_s": jnp.zeros((b, t_len, cfg.n_kv), jnp.float32)}
+        return {"k": jnp.zeros((b, t_len, cfg.n_kv, cfg.hd), dt),
+                "v": jnp.zeros((b, t_len, cfg.n_kv, cfg.hd), dt)}
+    if kind in ("attn", "cross", "moe"):
+        return {"kv": kv(t_max)}
+    if kind == "local":
+        return {"kv": kv(min(t_max, cfg.local_window))}
+    if kind == "rec":
+        return {"rec": recurrent.rglru_block_state(b, cfg.d_model, dt)}
+    if kind == "rwkv":
+        return {"rwkv": recurrent.rwkv_block_state(b, cfg.d_model,
+                                                   cfg.n_heads or 32, dt)}
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# the model
+# ---------------------------------------------------------------------------
+
+
+class Transformer:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.sparse_mlp: Optional[SparseMLP] = None
+        if cfg.ffn_block_sparse:
+            # one shared schedule (same pruning pattern every layer)
+            self.sparse_mlp, self._sparse_proto = SparseMLP.create(
+                jax.random.PRNGKey(17), cfg.d_model, cfg.d_ff,
+                block=cfg.ffn_block, density=cfg.ffn_density)
+        # layer grouping for scans
+        if cfg.family == "enc_dec":
+            self.groups = [("enc", "attn_bidir", cfg.enc_layers),
+                           ("dec", "cross", cfg.dec_layers)]
+        elif cfg.layer_pattern:
+            n_units = cfg.n_layers // len(cfg.layer_pattern)
+            rem = cfg.n_layers - n_units * len(cfg.layer_pattern)
+            self.groups = [("units", tuple(cfg.layer_pattern), n_units)]
+            if rem:
+                self.groups.append(("tail", tuple(cfg.layer_pattern[:rem]), 1))
+        else:
+            kind = cfg.layer_kind(0)
+            self.groups = [("layers", kind, cfg.n_layers)]
+
+    # -- init ---------------------------------------------------------------
+    def init(self, key):
+        cfg = self.cfg
+        keys = jax.random.split(key, 8)
+        params: Dict[str, Any] = {
+            "embed": layers.embedding_init(keys[0], cfg.padded_vocab, cfg.d_model),
+            "final_norm": layers.rmsnorm_init(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = layers.embedding_init(keys[1], cfg.padded_vocab,
+                                                      cfg.d_model)
+        if cfg.frontend != "none":
+            params["frontend"] = layers.dense_init(
+                keys[2], cfg.d_model, cfg.d_model)
+        kidx = 3
+        for gi, (name, kinds, n) in enumerate(self.groups):
+            gkey = keys[min(kidx + gi, 7)]
+
+            def one(k):
+                if isinstance(kinds, tuple):       # hybrid unit
+                    sub = {}
+                    for j, kd in enumerate(kinds):
+                        sub[f"b{j}"] = _block_init(cfg, jax.random.fold_in(k, j),
+                                                   kd, self.sparse_mlp)
+                    return sub
+                return _block_init(cfg, k, kinds, self.sparse_mlp)
+
+            lkeys = jax.random.split(gkey, n)
+            params[name] = jax.vmap(one)(lkeys)
+        return params
+
+    # -- scanned stacks -------------------------------------------------------
+    def _run_group(self, params_g, x, kinds, *, positions, enc_out=None,
+                   caches=None, cache_pos=None, collect_cache=False):
+        cfg = self.cfg
+
+        def body(carry, inp):
+            x, aux = carry
+            p_l = inp[0]
+            cache_l = inp[1] if caches is not None else None
+            if isinstance(kinds, tuple):
+                new_c = {}
+                for j, kd in enumerate(kinds):
+                    sub_c = cache_l[f"b{j}"] if cache_l is not None else None
+                    x, a, nc = _block_apply(
+                        cfg, p_l[f"b{j}"], x, kd, positions=positions,
+                        sparse_mlp=self.sparse_mlp, enc_out=enc_out,
+                        cache=sub_c, cache_pos=cache_pos)
+                    new_c[f"b{j}"] = nc
+                    aux = aux + a
+            else:
+                x, a, new_c = _block_apply(
+                    cfg, p_l, x, kinds, positions=positions,
+                    sparse_mlp=self.sparse_mlp, enc_out=enc_out,
+                    cache=cache_l, cache_pos=cache_pos)
+                aux = aux + a
+            return (x, aux), (new_c if collect_cache else 0)
+
+        body_fn = body
+        if cfg.remat and caches is None:
+            body_fn = jax.checkpoint(body, prevent_cse=False)
+        xs = (params_g,) if caches is None else (params_g, caches)
+        # NOTE (decode on CPU backend): XLA's bf16-dot emulation hoists f32
+        # converts of the per-layer KV-cache slices out of this scan and
+        # carries full f32 cache copies in the while tuple. This is a
+        # CPU-only artifact (TPU bf16 dots are native); the dry-run measures
+        # and subtracts it — see launch/dryrun.py `cpu_artifact_bytes`.
+        (x, aux), new_caches = jax.lax.scan(
+            body_fn, (x, jnp.zeros((), jnp.float32)), xs)
+        return x, aux, (new_caches if collect_cache else None)
+
+    # -- forward (train / prefill logits) -------------------------------------
+    def forward(self, params, tokens, vis_embeds=None, enc_embeds=None):
+        """tokens: (B, T_text). vis_embeds: (B, Nv, D) for vlm/audio decoder
+        prefixes; enc_embeds: (B, T_enc, D) for enc_dec."""
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        x = layers.embedding_apply(params["embed"], tokens).astype(dt)
+        if vis_embeds is not None:
+            v = layers.dense_apply(params["frontend"], vis_embeds.astype(dt))
+            x = jnp.concatenate([v, x], axis=1)
+        x = act_constrain(x, "hidden")
+        b, t, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(t), (b, t))
+        aux_total = jnp.zeros((), jnp.float32)
+
+        enc_out = None
+        if cfg.family == "enc_dec":
+            e = layers.dense_apply(params["frontend"], enc_embeds.astype(dt))
+            ep = jnp.broadcast_to(jnp.arange(e.shape[1]), (b, e.shape[1]))
+            enc_out, aux, _ = self._run_group(
+                params["enc"], e, "attn_bidir", positions=ep)
+            aux_total += aux
+            x, aux, _ = self._run_group(params["dec"], x, "cross",
+                                        positions=positions, enc_out=enc_out)
+            aux_total += aux
+        else:
+            for (name, kinds, n) in self.groups:
+                x, aux, _ = self._run_group(params[name], x, kinds,
+                                            positions=positions)
+                aux_total += aux
+        x = layers.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+        head = params.get("lm_head", params["embed"])
+        logits = act_constrain(layers.lm_head_apply(head, x), "logits")
+        return logits, aux_total
+
+    def loss_fn(self, params, batch):
+        """batch: dict(tokens, targets[, vis_embeds, enc_embeds, mask])."""
+        logits, aux = self.forward(
+            params, batch["tokens"], vis_embeds=batch.get("vis_embeds"),
+            enc_embeds=batch.get("enc_embeds"))
+        targets = batch["targets"]
+        n_prefix = logits.shape[1] - targets.shape[1]
+        if n_prefix > 0:
+            logits = logits[:, n_prefix:]
+        loss = layers.cross_entropy(logits, targets, batch.get("mask"))
+        return loss + 0.01 * aux, {"loss": loss, "aux": aux}
+
+    # -- serving ---------------------------------------------------------------
+    def init_cache(self, batch_size: int, max_len: int):
+        cfg = self.cfg
+        dt = _dtype(cfg)
+
+        def stack(kinds, n):
+            if isinstance(kinds, tuple):
+                one = {f"b{j}": _block_cache_init(cfg, kd, batch_size, max_len, dt)
+                       for j, kd in enumerate(kinds)}
+            else:
+                one = _block_cache_init(cfg, kinds, batch_size, max_len, dt)
+            return jax.tree.map(lambda a: jnp.broadcast_to(a, (n,) + a.shape), one)
+
+        return {name: stack(kinds, n) for (name, kinds, n) in self.groups
+                if name != "enc"}
+
+    def decode_step(self, params, cache, token, pos, enc_out=None):
+        """token: (B, T) int32 (T=1 decode, T>1 chunked prefill); pos:
+        scalar int32 — absolute position of token[:, 0].
+
+        Returns (logits (B, vocab) for the last position, new_cache)."""
+        cfg = self.cfg
+        dt = _dtype(cfg)
+        x = layers.embedding_apply(params["embed"], token).astype(dt)
+        x = act_constrain(x, "hidden")
+        b, t, _ = x.shape
+        positions = (pos + jnp.arange(t))[None, :].astype(jnp.int32)
+        positions = jnp.broadcast_to(positions, (b, t))
+        new_cache = {}
+        for (name, kinds, n) in self.groups:
+            if name == "enc":
+                continue
+            x, _, nc = self._run_group(
+                params[name], x, kinds, positions=positions, enc_out=enc_out,
+                caches=cache[name], cache_pos=pos, collect_cache=True)
+            new_cache[name] = nc
+        x = layers.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+        head = params.get("lm_head", params["embed"])
+        logits = layers.lm_head_apply(head, x)
+        return logits[:, -1], new_cache

@@ -1,0 +1,4 @@
+from .adamw import AdamW, AdamWState
+from .schedule import constant, cosine_with_warmup
+
+__all__ = ["AdamW", "AdamWState", "constant", "cosine_with_warmup"]

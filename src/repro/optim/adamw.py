@@ -1,0 +1,64 @@
+"""AdamW + gradient clipping, pure-JAX pytrees (no optax dependency).
+
+Optimizer state lives in the same sharding as the parameters (FSDP-friendly:
+m/v inherit param PartitionSpecs), master weights are fp32.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable[[jax.Array], jax.Array]      # schedule: step → lr
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    state_dtype: Any = jnp.float32   # bf16 = low-memory (8-bit-Adam-style)
+
+    def init(self, params) -> AdamWState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros_like(p, dtype=self.state_dtype), params)
+        return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                          v=jax.tree.map(jnp.copy, zeros))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        # global-norm clip
+        gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                             for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+        sd = self.state_dtype
+        m = jax.tree.map(
+            lambda m_, g: (self.b1 * m_.astype(jnp.float32)
+                           + (1 - self.b1) * g).astype(sd), state.m, grads)
+        v = jax.tree.map(
+            lambda v_, g: (self.b2 * v_.astype(jnp.float32)
+                           + (1 - self.b2) * g * g).astype(sd), state.v, grads)
+        bc1 = 1 - self.b1 ** step.astype(jnp.float32)
+        bc2 = 1 - self.b2 ** step.astype(jnp.float32)
+        lr = self.lr(step)
+
+        def upd(p, m_, v_):
+            mh = m_.astype(jnp.float32) / bc1
+            vh = v_.astype(jnp.float32) / bc2
+            delta = mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, AdamWState(step=step, m=m, v=v), {
+            "grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,21 @@
+"""LR schedules (step → lr), jit-safe."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_with_warmup(peak_lr: float, warmup: int, total: int,
+                       floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def constant(lr_value: float):
+    def lr(step):
+        return jnp.full((), lr_value, jnp.float32)
+    return lr

@@ -1,0 +1,100 @@
+"""Roofline terms from compiled dry-run artifacts (TPU v5e constants).
+
+    compute    = HLO_FLOPs   / (chips × 197e12 FLOP/s)
+    memory     = HLO_bytes   / (chips × 819e9  B/s)
+    collective = coll_bytes  / (chips × 50e9   B/s per ICI link)
+
+``cost_analysis`` supplies FLOPs/bytes; collective bytes are parsed from the
+compiled HLO text (operand sizes of all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute, including async start forms).  Cross-pod
+("pod"-axis) collectives ride DCN and are reported separately at 25 GB/s
+per host link.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+DCN_BW = 25e9                # bytes/s per host (cross-pod)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# result shape of an HLO op: `%name = <shape-or-tuple> opcode(`
+_OP_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[a-z0-9_]+\[[^\]]*\][^\s]*))\s+"
+    r"((?:all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?)\(", re.IGNORECASE)
+
+_SHAPE_RE = re.compile(r"([a-z0-9_]+)\[([0-9,\s]*)\]")
+
+_GROUPS_RE = re.compile(r"replica_groups=\{?([^}]*)\}?")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            d = d.strip()
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Total result bytes per collective opcode in an HLO module."""
+    out: Dict[str, int] = {}
+    for m in _OP_RE.finditer(hlo_text):
+        shape_txt, opcode = m.group(1), m.group(2).lower()
+        opcode = opcode.replace("-start", "")
+        out[opcode] = out.get(opcode, 0) + _shape_bytes(shape_txt)
+    return out
+
+
+def roofline_terms(flops: float, bytes_accessed: float, coll_bytes: float,
+                   chips: int, *, dcn_bytes: float = 0.0,
+                   dcn_links: int = 1) -> Dict[str, float]:
+    compute_s = flops / (chips * PEAK_FLOPS)
+    memory_s = bytes_accessed / (chips * HBM_BW)
+    collective_s = coll_bytes / (chips * ICI_BW)
+    dcn_s = dcn_bytes / (max(dcn_links, 1) * DCN_BW)
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s, "dcn_s": dcn_s}
+    dominant = max(("compute_s", "memory_s", "collective_s", "dcn_s"),
+                   key=lambda k: terms[k])
+    terms["dominant"] = dominant
+    terms["bound_s"] = terms[dominant]
+    return terms
+
+
+def model_flops(cfg, shape, n_tokens: float = None) -> float:
+    """Analytic 2·N·tokens (dense) / 2·N_active·tokens (MoE) + attention
+    quadratic term, ×3 for train (fwd+bwd)."""
+    if n_tokens is None:
+        n_tokens = shape.global_batch * (shape.seq_len if shape.kind == "train"
+                                         else (shape.seq_len if shape.kind == "prefill" else 1))
+    n = cfg.active_param_count()
+    flops = 2.0 * n * n_tokens
+    # attention: 4·tokens·ctx·(H·hd) per attn layer, ×0.5 causal
+    if cfg.n_heads:
+        n_attn = sum(1 for i in range(cfg.n_layers)
+                     if cfg.layer_kind(i) in ("attn", "moe", "local", "cross"))
+        ctx = shape.seq_len
+        if cfg.layer_pattern and "local" in cfg.layer_pattern:
+            ctx = min(ctx, cfg.local_window)
+        flops += 0.5 * 4.0 * n_tokens * ctx * cfg.n_heads * cfg.hd * n_attn
+    mult = 3.0 if shape.kind == "train" else 1.0
+    return flops * mult

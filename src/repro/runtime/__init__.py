@@ -1,0 +1,4 @@
+from .train_loop import Trainer, TrainerConfig, make_train_step
+from .serve import Request, Server
+
+__all__ = ["Trainer", "TrainerConfig", "make_train_step", "Request", "Server"]

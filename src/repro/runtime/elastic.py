@@ -1,0 +1,65 @@
+"""Elastic scaling: rebuild the mesh after node loss and reshard state.
+
+Recovery path at scale (DESIGN.md §5):
+
+1. a node fails → the job controller detects it and relaunches with the
+   surviving host set;
+2. :func:`make_elastic_mesh` builds the largest valid (data, model) mesh
+   from the surviving devices (model parallelism is preserved — TP degree
+   is fixed by layer shapes; the data axis shrinks);
+3. the latest atomic checkpoint is restored *onto the new mesh* — the
+   checkpoint stores unsharded arrays, so restore is just device_put under
+   the new NamedShardings;
+4. the data pipeline is stateless-deterministic, so the global batch
+   simply re-partitions over the surviving data ranks (smaller dp → more
+   grad-accumulation steps keeps the effective batch constant).
+
+Straggler mitigation note: because any host can recompute any (step,
+shard), a slow host's shard can be speculatively duplicated on an idle one
+and the first result wins — the hook for that policy is the deterministic
+pipeline; the runtime keeps it policy-level (no kernel changes needed).
+"""
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+from repro.checkpoint.checkpoint import CheckpointManager
+from repro.sharding import make_shardings, params_pspecs
+
+
+def make_elastic_mesh(devices: Optional[Sequence] = None,
+                      model_parallel: int = 1,
+                      axis_names=("data", "model")) -> Mesh:
+    """Largest (data, model) mesh from the available devices."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = len(devices)
+    assert n >= model_parallel, (n, model_parallel)
+    dp = n // model_parallel
+    use = devices[: dp * model_parallel]
+    arr = np.array(use).reshape(dp, model_parallel)
+    return Mesh(arr, axis_names)
+
+
+def restore_onto_mesh(ckpt: CheckpointManager, step: int, state_like,
+                      mesh: Mesh):
+    """Restore a checkpoint under a (possibly different) mesh's shardings."""
+    params_like = state_like[0]
+    pspecs = params_pspecs(params_like)
+    params_sh = make_shardings(mesh, pspecs, jax.tree.map(lambda x: x, params_like))
+    # opt state: (step scalar, m, v) share the param specs
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    opt_like = state_like[1]
+    opt_sh = type(opt_like)(step=NamedSharding(mesh, P()),
+                            m=params_sh, v=params_sh)
+    return ckpt.restore(step, state_like, shardings=(params_sh, opt_sh))
+
+
+def rescale_accum(global_batch: int, old_dp: int, new_dp: int,
+                  old_accum: int) -> int:
+    """Keep the effective global batch constant after dp shrink."""
+    per_device = global_batch // (old_dp * old_accum)
+    return max(1, global_batch // (new_dp * per_device))

@@ -1,0 +1,80 @@
+"""GPipe-style pipeline parallelism over a ``stage`` mesh axis.
+
+Optional parallelism mode (the production dry-run uses DP×TP per spec):
+layers are partitioned into S stages, each stage's params live on one
+stage rank, and microbatches flow through a ``ppermute`` ring inside
+``shard_map``.  Wall-clock = (n_micro + S - 1) ticks — classic GPipe fill/
+drain; bubble fraction (S-1)/(n_micro+S-1).
+
+This module implements *inference/forward* pipelining (the pattern that
+matters for the collective schedule); training composes it with grad
+accumulation outside.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def pipeline_forward(stage_fn: Callable, stage_params, x, *, mesh: Mesh,
+                     n_micro: int, axis: str = "stage"):
+    """Run ``x`` through S pipelined stages.
+
+    Args:
+      stage_fn: (params_one_stage, activation (mb, ...)) → activation.
+      stage_params: pytree with leading dim S, sharded P(axis) on dim 0.
+      x: (n_micro, mb, ...) input microbatches (replicated).
+    Returns:
+      (n_micro, mb, ...) outputs of the final stage (replicated).
+    """
+    s = mesh.shape[axis]
+    ticks = n_micro + s - 1
+    perm_fwd = [(i, i + 1) for i in range(s - 1)]
+
+    def spmd(params_local, x_all):
+        sid = jax.lax.axis_index(axis)
+        p_one = jax.tree.map(lambda a: a[0], params_local)
+        mb_shape = x_all.shape[1:]
+
+        def tick(carry, t):
+            buf = carry
+            # stage 0 pulls microbatch t (clamped); others take the ring buf
+            feed_idx = jnp.clip(t, 0, n_micro - 1)
+            inp0 = jax.lax.dynamic_index_in_dim(x_all, feed_idx, 0,
+                                                keepdims=False)
+            inp = jnp.where(sid == 0, inp0, buf)
+            out = stage_fn(p_one, inp)
+            live = (t >= sid) & (t - sid < n_micro)
+            out = jnp.where(live, out, jnp.zeros_like(out))
+            nxt = jax.lax.ppermute(out, axis, perm_fwd)
+            # final stage emits its result at ticks [s-1, s-1+n_micro)
+            emit = jnp.where((sid == s - 1) & live, out, jnp.zeros_like(out))
+            return nxt, emit
+
+        _, emits = jax.lax.scan(tick, jnp.zeros(mb_shape, x_all.dtype),
+                                jnp.arange(ticks))
+        # emits: (ticks, mb, ...) — only the last stage's window is nonzero;
+        # psum over the stage axis broadcasts it to every rank
+        emits = jax.lax.psum(emits, axis)
+        return jax.lax.dynamic_slice_in_dim(emits, s - 1, n_micro, 0)
+
+    fn = shard_map(
+        spmd, mesh=mesh,
+        in_specs=(P(axis), P()),
+        out_specs=P(),
+        check_rep=False)
+    return fn(stage_params, x)
+
+
+def split_layers_into_stages(stacked_params, n_stages: int):
+    """Reshape layer-stacked params (L, ...) → (S, L/S, ...)."""
+    def re(a):
+        l = a.shape[0]
+        assert l % n_stages == 0, (l, n_stages)
+        return a.reshape(n_stages, l // n_stages, *a.shape[1:])
+    return jax.tree.map(re, stacked_params)

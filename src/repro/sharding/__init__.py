@@ -1,0 +1,7 @@
+from .rules import (act_constrain, batch_pspec, batch_pspecs, cache_pspec,
+                    constrain, constrain_like_params, dp_axes, make_shardings,
+                    param_pspec, params_pspecs, sanitize_pspec)
+
+__all__ = ["act_constrain", "batch_pspec", "batch_pspecs", "cache_pspec",
+           "constrain", "dp_axes", "make_shardings", "param_pspec",
+           "params_pspecs", "sanitize_pspec", "constrain_like_params"]

@@ -1,0 +1,18 @@
+"""Cycle-approximate evaluation substrate for the paper's figures."""
+from .segfold_sim import SegFoldConfig, SimResult, simulate_segfold
+from .baselines import (flexagon_best, flexagon_gust, flexagon_ip,
+                        flexagon_op, spada)
+from . import matrices
+
+ACCELERATORS = {
+    "flexagon_ip": flexagon_ip,
+    "flexagon_op": flexagon_op,
+    "flexagon_gust": flexagon_gust,
+    "spada": spada,
+}
+
+__all__ = [
+    "SegFoldConfig", "SimResult", "simulate_segfold",
+    "ACCELERATORS", "flexagon_best", "flexagon_gust",
+    "flexagon_ip", "flexagon_op", "spada", "matrices",
+]

@@ -1,0 +1,114 @@
+"""Folding + TPU block-schedule tests."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.folding import (balance_bins, fold_segments, round_robin_bins,
+                                spatial_fold, temporal_fold_spills)
+from repro.core.formats import BSR
+from repro.core.schedule import (build_spgemm_schedule, build_spmm_schedule,
+                                 spgemm_schedule_traffic, spmm_schedule_traffic,
+                                 symbolic_spgemm)
+
+
+def test_spatial_fold_reduces_spills():
+    rng = np.random.default_rng(0)
+    lengths = rng.integers(1, 64, size=16)   # some rows overflow P=16
+    on = spatial_fold(lengths, R=16, P=16, enabled=True)
+    off = spatial_fold(lengths, R=16, P=16, enabled=False)
+    assert on["spills"] <= off["spills"]
+    assert on["utilization"] >= off["utilization"] - 1e-9
+
+
+def test_temporal_fold_spills():
+    assert temporal_fold_spills(np.array([10, 20, 5]), capacity=8) == (2 + 12)
+
+
+def test_fold_segments_conserves_work():
+    sizes = np.array([5, 130, 7, 300])
+    seg, chunk = fold_segments(sizes, fold_len=64)
+    assert chunk.sum() == sizes.sum()
+    assert chunk.max() <= 64
+    for i, s in enumerate(sizes):
+        assert chunk[seg == i].sum() == s
+
+
+def test_lpt_beats_round_robin():
+    rng = np.random.default_rng(1)
+    sizes = (rng.pareto(1.5, size=200) * 10 + 1).astype(np.int64)
+    _, lpt = balance_bins(sizes, 16)
+    _, rr = round_robin_bins(sizes, 16)
+    assert lpt["imbalance"] <= rr["imbalance"] + 1e-9
+
+
+# --- block schedules ---------------------------------------------------------
+
+
+def _bsr(seed, shape=(256, 320), block=(32, 32), density=0.3):
+    return BSR.random(np.random.default_rng(seed), shape, block, density)
+
+
+def test_spmm_schedule_covers_blocks_once():
+    a = _bsr(0)
+    for policy in ("segment", "gustavson", "outer"):
+        s = build_spmm_schedule(a, policy)
+        assert sorted(s.a_idx.tolist()) == list(range(a.nblocks))
+        assert s.seg_start[0] == 1 and s.seg_write[-1] == 1
+
+
+def test_segment_schedule_segments_contiguous():
+    a = _bsr(1)
+    s = build_spmm_schedule(a, "segment")
+    # within a segment (between starts) m must be constant
+    cur = None
+    for i in range(s.n_items):
+        if s.seg_start[i]:
+            cur = s.m[i]
+        assert s.m[i] == cur
+
+
+def test_segment_traffic_no_worse_than_static():
+    for seed in range(5):
+        a = _bsr(seed, density=0.25)
+        t = {p: spmm_schedule_traffic(build_spmm_schedule(a, p), 32, 32, 512)
+             for p in ("segment", "gustavson", "outer")}
+        assert t["segment"]["total"] <= min(t["gustavson"]["total"],
+                                            t["outer"]["total"]) * 1.001
+
+
+def test_symbolic_spgemm_matches_dense():
+    a, b = _bsr(2), _bsr(3, shape=(320, 192))
+    brow, bcol = symbolic_spgemm(a.block_mask(), b.block_mask())
+    want = (a.block_mask().astype(int) @ b.block_mask().astype(int)) > 0
+    got = np.zeros_like(want)
+    got[brow, bcol] = True
+    assert np.array_equal(got, want)
+
+
+def test_spgemm_schedule_triples_complete():
+    a, b = _bsr(4), _bsr(5, shape=(320, 192))
+    s = build_spgemm_schedule(a, b, "segment")
+    # every (m,k)×(k,n) contributing pair appears exactly once
+    amask, bmask = a.block_mask(), b.block_mask()
+    expect = int(sum(amask[m, k] and bmask[k, n]
+                     for m in range(amask.shape[0])
+                     for k in range(amask.shape[1])
+                     for n in range(bmask.shape[1])))
+    assert s.n_items == expect
+    tr = {p: spgemm_schedule_traffic(build_spgemm_schedule(a, b, p), 32, 32, 32)
+          for p in ("segment", "gustavson", "outer")}
+    assert tr["segment"]["total"] <= min(tr["gustavson"]["total"],
+                                         tr["outer"]["total"]) * 1.05
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 1000), gm=st.integers(2, 8), gk=st.integers(2, 8),
+       density=st.floats(0.1, 0.9))
+def test_spmm_schedule_property(seed, gm, gk, density):
+    rng = np.random.default_rng(seed)
+    a = BSR.random(rng, (gm * 16, gk * 16), (16, 16), density)
+    s = build_spmm_schedule(a, "segment")
+    assert sorted(s.a_idx.tolist()) == list(range(a.nblocks))
+    # seg_write marks exactly the last item of every segment
+    for i in range(s.n_items - 1):
+        assert s.seg_write[i] == s.seg_start[i + 1]
+    assert s.seg_write[-1] == 1

@@ -1,0 +1,77 @@
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import (BSR, CSC, CSR, DCSR, csr_from_coo, random_csr,
+                                spgemm_reference)
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def test_csr_roundtrip(rng):
+    a = random_csr(rng, (37, 53), 0.1)
+    d = a.to_dense()
+    b = CSR.from_dense(d)
+    assert np.allclose(b.to_dense(), d)
+    assert b.nnz == a.nnz
+
+
+def test_transpose(rng):
+    a = random_csr(rng, (20, 30), 0.15)
+    assert np.allclose(a.transpose().to_dense(), a.to_dense().T)
+
+
+def test_csc(rng):
+    a = random_csr(rng, (20, 30), 0.15)
+    c = CSC.from_csr(a)
+    assert np.allclose(c.to_dense(), a.to_dense())
+    for k in range(30):
+        rows, vals = c.col(k)
+        assert np.all(np.diff(rows) > 0)  # sorted, unique
+
+
+def test_dcsr_skips_empty_rows(rng):
+    d = np.zeros((10, 8), np.float32)
+    d[2, 3] = 1.0
+    d[7, 1] = 2.0
+    a = CSR.from_dense(d)
+    dc = DCSR.from_csr(a)
+    assert list(dc.row_ids) == [2, 7]
+    assert dc.lookup(2) == 0
+    assert dc.lookup(3) == -1
+
+
+def test_bsr_roundtrip(rng):
+    a = rng.standard_normal((64, 96)).astype(np.float32)
+    a[a < 0.8] = 0  # sparsify
+    b = BSR.from_dense(a, (16, 16))
+    assert np.allclose(b.to_dense(), a)
+
+
+def test_bsr_random_density(rng):
+    b = BSR.random(rng, (256, 256), (32, 32), 0.25)
+    assert 0 < b.block_density <= 1.0
+    assert b.blocks.shape[1:] == (32, 32)
+
+
+def test_spgemm_reference(rng):
+    a = random_csr(rng, (15, 20), 0.2)
+    b = random_csr(rng, (20, 12), 0.2)
+    c = spgemm_reference(a, b)
+    assert np.allclose(c.to_dense(), a.to_dense() @ b.to_dense(), atol=1e-5)
+
+
+@settings(deadline=None, max_examples=30)
+@given(m=st.integers(1, 30), n=st.integers(1, 30),
+       density=st.floats(0.01, 0.5), seed=st.integers(0, 1000))
+def test_csr_dense_roundtrip_property(m, n, density, seed):
+    rng = np.random.default_rng(seed)
+    a = random_csr(rng, (m, n), density)
+    assert np.allclose(CSR.from_dense(a.to_dense()).to_dense(), a.to_dense())
+    # rows sorted by construction
+    for i in range(m):
+        cols, _ = a.row(i)
+        assert np.all(np.diff(cols) > 0)

@@ -1,0 +1,72 @@
+"""Roofline machinery: HLO collective parsing + term math."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.roofline.analysis import (collective_bytes, model_flops,
+                                     roofline_terms)
+from repro.configs import get_config
+from repro.configs.base import SHAPES
+
+
+def test_collective_parser_on_real_hlo():
+    import os
+    import subprocess, sys, textwrap
+    # psum inside shard_map must surface as all-reduce bytes
+    script = textwrap.dedent("""
+        import os
+        os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+        import jax, jax.numpy as jnp
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+        from repro.roofline.analysis import collective_bytes
+        mesh = jax.make_mesh((8,), ('d',),
+                             axis_types=(jax.sharding.AxisType.Auto,))
+        def f(x):
+            return jax.lax.psum(x, 'd')
+        g = shard_map(f, mesh=mesh, in_specs=P('d'), out_specs=P())
+        c = jax.jit(g).lower(jax.ShapeDtypeStruct((64, 128), jnp.float32)).compile()
+        cb = collective_bytes(c.as_text())
+        assert cb.get('all-reduce', 0) > 0, cb
+        print('PARSER_OK', cb)
+    """)
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = "src"
+    r = subprocess.run([sys.executable, "-c", script], capture_output=True,
+                       text=True, timeout=300, env=env)
+    assert r.returncode == 0 and "PARSER_OK" in r.stdout, r.stderr
+
+
+def test_collective_parser_text():
+    hlo = """
+  %ag = bf16[8,128]{1,0} all-gather(%x), dimensions={0}
+  %ar.1 = f32[256]{0} all-reduce-start(%y), to_apply=%sum
+  %rs = (f32[64]{0}, f32[64]{0}) reduce-scatter(%a, %b), dimensions={0}
+  %cp = u32[16]{0} collective-permute(%z), source_target_pairs={{0,1}}
+"""
+    cb = collective_bytes(hlo)
+    assert cb["all-gather"] == 8 * 128 * 2
+    assert cb["all-reduce"] == 256 * 4
+    assert cb["reduce-scatter"] == 2 * 64 * 4
+    assert cb["collective-permute"] == 16 * 4
+
+
+def test_roofline_terms_dominance():
+    t = roofline_terms(flops=197e12 * 256, bytes_accessed=1.0,
+                       coll_bytes=1.0, chips=256)
+    assert t["dominant"] == "compute_s"
+    assert abs(t["compute_s"] - 1.0) < 1e-9
+
+
+def test_model_flops_sane():
+    cfg = get_config("granite-3-8b")
+    mf_train = model_flops(cfg, SHAPES["train_4k"])
+    mf_prefill = model_flops(cfg, SHAPES["prefill_32k"])
+    n = cfg.param_count()
+    toks = 256 * 4096
+    assert mf_train > 3 * 2 * n * toks * 0.9       # ≥ 6·N·D
+    assert mf_prefill > 2 * n * 32 * 32768 * 0.9
+    # MoE active < total
+    moe = get_config("phi3.5-moe-42b-a6.6b")
+    assert moe.active_param_count() < 0.5 * moe.param_count()

@@ -1,0 +1,82 @@
+"""SEGMENTBC / V-space invariants (paper §III-B) + correctness."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import CSC, random_csr
+from repro.core.segmentbc import VSpace, segment_spgemm_elementwise
+
+
+def test_vspace_invariants_after_routing():
+    vs = VSpace(mapping="lut")
+    rng = np.random.default_rng(0)
+    for _ in range(200):
+        m = int(rng.integers(0, 5))
+        n = int(rng.integers(0, 40))
+        vs.route(m, n, float(rng.standard_normal()))
+        vs.tick()
+    vs.check_invariants()          # column ordering per virtual row
+    rows, cols, vals = vs.to_coo()
+    # injectivity: distinct (m, n) → distinct coordinates
+    assert len(set(zip(rows.tolist(), cols.tolist()))) == rows.size
+
+
+def test_accumulate_vs_insert():
+    vs = VSpace(mapping="ideal")
+    vs.route(0, 5, 1.0)
+    vs.route(0, 5, 2.0)       # accumulate
+    vs.route(0, 3, 4.0)       # insert before
+    rows, cols, vals = vs.to_coo()
+    assert cols.tolist() == [3, 5]
+    assert vals.tolist() == [4.0, 3.0]
+
+
+@pytest.mark.parametrize("mapping", ["zero", "lut", "ideal"])
+def test_segment_spgemm_correct(mapping):
+    rng = np.random.default_rng(1)
+    a = random_csr(rng, (24, 30), 0.12)
+    b = random_csr(rng, (30, 20), 0.12)
+    c, tel = segment_spgemm_elementwise(CSC.from_csr(a), b, mapping=mapping)
+    assert np.allclose(c, a.to_dense() @ b.to_dense(), atol=1e-4)
+    assert tel["elements_routed"] > 0
+
+
+def test_displacement_ordering():
+    """zero-offset walks furthest; the stale LUT sits between zero and the
+    oracle (paper §VI-C.2)."""
+    rng = np.random.default_rng(2)
+    a = random_csr(rng, (32, 40), 0.15)
+    b = random_csr(rng, (40, 32), 0.15)
+    disps = {}
+    for mapping in ("zero", "lut", "ideal"):
+        _, tel = segment_spgemm_elementwise(CSC.from_csr(a), b, mapping=mapping)
+        disps[mapping] = tel["mean_displacement"]
+    assert disps["ideal"] == 0.0
+    assert disps["ideal"] <= disps["lut"] <= disps["zero"] + 1e-9
+
+
+def test_stale_lut_never_overshoots():
+    """Time-ascending property: a stale LUT start is always ≤ the true
+    legal start (left of it), never beyond the match position."""
+    vs = VSpace(mapping="lut", lut_write_ports=1)
+    rng = np.random.default_rng(3)
+    for i in range(100):
+        n = int(rng.integers(0, 50))
+        s = vs.start_position(0, n)
+        true_s = int(np.searchsorted(
+            np.asarray(vs.rows[0].cols if 0 in vs.rows else [], dtype=np.int64), n))
+        assert s <= true_s
+        vs.route(0, n, 1.0)
+        if i % 3 == 0:
+            vs.tick()
+
+
+@settings(deadline=None, max_examples=20)
+@given(seed=st.integers(0, 10_000),
+       mapping=st.sampled_from(["zero", "lut", "ideal"]))
+def test_spgemm_property(seed, mapping):
+    rng = np.random.default_rng(seed)
+    a = random_csr(rng, (12, 14), 0.2)
+    b = random_csr(rng, (14, 10), 0.2)
+    c, _ = segment_spgemm_elementwise(CSC.from_csr(a), b, mapping=mapping)
+    assert np.allclose(c, a.to_dense() @ b.to_dense(), atol=1e-4)

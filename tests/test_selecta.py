@@ -1,0 +1,77 @@
+"""SELECTA (Algorithm 1) invariants — unit + hypothesis property tests."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.formats import CSC, random_csr
+from repro.core.selecta import SelectaState, run_selecta, selecta_stats
+
+
+def _csc(seed, m=24, k=20, density=0.15):
+    rng = np.random.default_rng(seed)
+    return CSC.from_csr(random_csr(rng, (m, k), density))
+
+
+def test_batches_cover_all_pairs_once():
+    a = _csc(0)
+    batches = run_selecta(a, w_max=4, r_max=8)
+    seen = [p for b in batches for p in b]
+    assert len(seen) == len(set(seen)) == a.nnz
+
+
+def test_no_m_conflicts_within_batch():
+    a = _csc(1)
+    for batch in run_selecta(a, w_max=8, r_max=8):
+        ms = [m for m, _ in batch]
+        assert len(ms) == len(set(ms)), "same output row twice in one batch"
+
+
+def test_batch_size_bounded():
+    a = _csc(2)
+    for batch in run_selecta(a, w_max=8, r_max=5):
+        assert 0 < len(batch) <= 5
+
+
+def test_window_bound_respected():
+    a = _csc(3)
+    st_ = SelectaState(a=a, w_max=3, r_max=8)
+    while not st_.done:
+        assert len(st_.window) <= 3
+        st_.select()
+
+
+def test_dynamic_k_increases_sharing():
+    """Greedy max-occupancy ordering should share k at least as much as a
+    fixed one-k-at-a-time order packs slots."""
+    a = _csc(4, m=64, k=48, density=0.2)
+    dyn = selecta_stats(run_selecta(a, 32, 16, dynamic_k=True), 16)
+    fix = selecta_stats(run_selecta(a, 32, 16, dynamic_k=False), 16)
+    assert dyn["occupancy"] >= fix["occupancy"] - 1e-9
+    assert dyn["pairs"] == fix["pairs"] == a.nnz
+
+
+def test_k_filter_skips_inactive():
+    a = _csc(5)
+    k_active = np.zeros(a.shape[1], dtype=bool)
+    k_active[::2] = True
+    st_ = SelectaState(a=a, w_max=8, r_max=8, k_active=k_active)
+    while not st_.done:
+        for _, k in st_.select():
+            assert k_active[k]
+
+
+@settings(deadline=None, max_examples=25)
+@given(seed=st.integers(0, 10_000), w=st.integers(1, 16), r=st.integers(1, 16),
+       density=st.floats(0.05, 0.6))
+def test_selecta_properties(seed, w, r, density):
+    rng = np.random.default_rng(seed)
+    a = CSC.from_csr(random_csr(rng, (16, 16), density))
+    batches = run_selecta(a, w_max=w, r_max=r)
+    seen = set()
+    for batch in batches:
+        assert len(batch) <= r
+        ms = [m for m, _ in batch]
+        assert len(ms) == len(set(ms))
+        for p in batch:
+            assert p not in seen
+            seen.add(p)
+    assert len(seen) == a.nnz

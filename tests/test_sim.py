@@ -1,0 +1,77 @@
+"""Simulator behaviour tests: mechanism ablations must move the right way."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.sim import matrices
+from repro.sim.baselines import (flexagon_best, flexagon_gust, flexagon_ip,
+                                 flexagon_op, spada)
+from repro.sim.segfold_sim import SegFoldConfig, simulate_segfold
+
+
+@pytest.fixture(scope="module")
+def mats():
+    rng = np.random.default_rng(0)
+    a = matrices.banded(rng, 512, 512, 0.02)
+    return a, a.transpose()
+
+
+def test_sim_runs_and_counts_macs(mats):
+    a, b = mats
+    res = simulate_segfold(a, b)
+    # MACs must equal the exact SpGEMM multiply count
+    import scipy.sparse as sp
+    A = sp.csr_matrix((np.ones_like(a.data, np.int8), a.indices, a.indptr),
+                      shape=a.shape)
+    b_lens = np.diff(b.indptr)
+    want = int((A @ b_lens.reshape(-1, 1)).sum())
+    assert res.macs == want
+    assert res.cycles > 0
+
+
+def test_mapping_ablation_direction(mats):
+    a, b = mats
+    cfg = SegFoldConfig()
+    zero = simulate_segfold(a, b, dataclasses.replace(cfg, mapping="zero"))
+    lut = simulate_segfold(a, b, dataclasses.replace(cfg, mapping="lut"))
+    ideal = simulate_segfold(a, b, dataclasses.replace(cfg, mapping="ideal"))
+    assert ideal.cycles <= lut.cycles <= zero.cycles * 1.001
+
+
+def test_window_monotone_small(mats):
+    a, b = mats
+    cfg = SegFoldConfig()
+    c1 = simulate_segfold(a, b, dataclasses.replace(cfg, window=1)).cycles
+    c32 = simulate_segfold(a, b, dataclasses.replace(cfg, window=32)).cycles
+    assert c32 <= c1
+
+
+def test_folding_helps_on_long_rows():
+    rng = np.random.default_rng(3)
+    a = matrices.powerlaw(rng, 384, 384, 8e-3)
+    b = a.transpose()
+    cfg = SegFoldConfig()
+    on = simulate_segfold(a, b, dataclasses.replace(cfg, spatial_folding=True))
+    off = simulate_segfold(a, b, dataclasses.replace(cfg, spatial_folding=False))
+    assert on.cycles <= off.cycles * 1.001
+
+
+def test_segfold_beats_baselines_on_suite_matrix():
+    rng = np.random.default_rng(4)
+    a = matrices.banded(rng, 768, 768, 0.012)
+    b = a.transpose()
+    cfg = SegFoldConfig(cache_bytes=256 * 1024)
+    seg = simulate_segfold(a, b, cfg)
+    sp_ = spada(a, b, cfg)
+    fb = flexagon_best(a, b, cfg)
+    assert seg.cycles < sp_.cycles
+    assert seg.cycles < fb["cycles"]
+
+
+def test_baselines_compute_same_workload(mats):
+    a, b = mats
+    cfg = SegFoldConfig(cache_bytes=256 * 1024)
+    macs = {f.__name__: f(a, b, cfg).macs
+            for f in (flexagon_gust, flexagon_op, flexagon_ip)}
+    assert len(set(macs.values())) == 1, macs
