@@ -1,11 +1,14 @@
 """Kernel-level benchmarks: Segment-schedule traffic savings (the TPU reuse
-metric) + interpret-mode wall time vs the jnp oracle."""
+metric) + interpret-mode wall time vs the jnp oracle.
+
+Policies are enumerated from the registry (``repro.api.available_policies``)
+so newly registered dataflows show up in the sweep without editing this file.
+"""
 import numpy as np
 import jax.numpy as jnp
 
+from repro import api
 from repro.core.formats import BSR
-from repro.core.schedule import build_spmm_schedule, spmm_schedule_traffic
-from repro.kernels import ops
 
 from .common import Csv, timed
 
@@ -13,24 +16,28 @@ from .common import Csv, timed
 def run(csv: Csv) -> dict:
     rng = np.random.default_rng(0)
     out = {}
+    policies = api.available_policies()
     for (m, k, blk, dens) in [(1024, 1024, 128, 0.25), (2048, 1024, 128, 0.1),
                               (512, 2048, 64, 0.3)]:
         a = BSR.random(rng, (m, k), (blk, blk), dens)
-        tr = {p: spmm_schedule_traffic(build_spmm_schedule(a, p), blk, blk, 1024)
-              for p in ("segment", "gustavson", "outer")}
-        save_g = tr["gustavson"]["total"] / tr["segment"]["total"]
-        save_o = tr["outer"]["total"] / tr["segment"]["total"]
-        out[(m, k, blk, dens)] = (save_g, save_o)
+        tr = {p: api.plan_matmul(a, n_cols_hint=1024, policy=p).traffic
+              for p in policies}
+        base = {p: t["total"] for p, t in tr.items() if p != "segment"}
+        ratios = {p: base[p] / tr["segment"]["total"] for p in base}
+        out[(m, k, blk, dens)] = ratios
         csv.add(f"kernel/spmm_traffic_M{m}K{k}b{blk}d{dens}", 0.0,
-                f"segment_traffic_saving_vs_gustavson={save_g:.3f}"
-                f";vs_outer={save_o:.3f}")
+                ";".join(f"segment_traffic_saving_vs_{p}={r:.3f}"
+                         for p, r in sorted(ratios.items())))
     # interpret-mode numeric check timing (CPU; TPU wall-time N/A here)
     a = BSR.random(rng, (512, 512), (64, 64), 0.25)
     bd = jnp.asarray(rng.standard_normal((512, 256)).astype(np.float32))
-    plan = ops.plan_spmm(a)
+    plan = api.plan_matmul(a, bd.shape)
     _, us1 = timed(lambda: np.asarray(plan(bd, bn=128)))
     _, us2 = timed(lambda: np.asarray(plan(bd, bn=128)))  # warm
     want = a.to_dense() @ np.asarray(bd)
     err = float(np.abs(np.asarray(plan(bd, bn=128)) - want).max())
     csv.add("kernel/spmm_interpret_512", us2, f"max_err={err:.2e}")
+    # reference-backend parity on the same plan (backend dispatch smoke)
+    err_ref = float(np.abs(np.asarray(plan(bd, backend="reference")) - want).max())
+    csv.add("kernel/spmm_reference_512", 0.0, f"max_err={err_ref:.2e}")
     return out

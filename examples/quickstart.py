@@ -10,10 +10,10 @@
 import numpy as np
 import jax.numpy as jnp
 
+from repro import api
 from repro.core.formats import BSR, CSC, random_csr
 from repro.core.segmentbc import segment_spgemm_elementwise
 from repro.core.selecta import run_selecta, selecta_stats
-from repro.kernels import ops
 from repro.sim import matrices
 from repro.sim.baselines import flexagon_best, spada
 from repro.sim.segfold_sim import SegFoldConfig, simulate_segfold
@@ -30,16 +30,24 @@ print(f"[1] Segment SpGEMM correct | SELECTA occupancy={stats['occupancy']:.2f} 
       f"k-sharing={stats['k_sharing']:.2f} "
       f"mean displacement={telemetry['mean_displacement']:.2f}")
 
-# --- 2. TPU block schedule + Pallas kernel ---------------------------------
+# --- 2. the unified repro.api: plan → execute → compare policies -----------
+# plan_matmul is the front door: it orders A's nonzero blocks under a policy
+# from the registry, caches the plan by pattern fingerprint, and returns a
+# SegmentPlan — a JAX pytree that passes through jit/vmap/grad as-is.
 A = BSR.random(rng, (512, 768), (64, 64), 0.25)
 x = jnp.asarray(rng.standard_normal((768, 256)).astype(np.float32))
-plan = ops.plan_spmm(A, policy="segment")
-y = plan(x, bn=128)
+plan = api.plan_matmul(A, x.shape, policy="segment")
+y = plan(x, bn=128)                       # default backend (interpret on CPU)
+y_ref = plan(x, backend="reference")      # pure-jnp oracle, same plan
 assert np.allclose(np.asarray(y), A.to_dense() @ np.asarray(x), atol=1e-3)
+assert np.allclose(np.asarray(y), np.asarray(y_ref), atol=1e-3)
+traffic = {p: api.plan_matmul(A, x.shape, policy=p).traffic["total"]
+           for p in api.available_policies()}
 t = plan.traffic
-print(f"[2] Pallas Segment-SpMM correct | schedule traffic "
-      f"{t['total']/1e6:.1f} MB (B fetches: {t['b_fetches']}, "
-      f"C segments: {t['c_segments']})")
+print(f"[2] repro.api Segment-SpMM correct on {api.default_backend()!r} | "
+      f"traffic {t['total']/1e6:.1f} MB (B fetches: {t['b_fetches']}, "
+      f"C segments: {t['c_segments']}) | "
+      + " ".join(f"{p}={traffic[p]/1e6:.1f}MB" for p in traffic))
 
 # --- 3. the accelerator simulator ------------------------------------------
 m = matrices.banded(rng, 1024, 1024, 0.01)

@@ -18,12 +18,16 @@ def main() -> None:
     ap.add_argument("--arch", default="granite-3-8b", choices=list(REGISTRY))
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=12)
+    ap.add_argument("--backend", default=None,
+                    help="repro.api backend for sparse layers "
+                         "(pallas|interpret|reference; default: autodetect)")
     args = ap.parse_args()
 
     cfg = reduced_config(get_config(args.arch))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    server = Server(model, params, batch_slots=3, max_len=128)
+    server = Server(model, params, batch_slots=3, max_len=128,
+                    backend=args.backend)
     rng = np.random.default_rng(1)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab,
                                         int(rng.integers(4, 24)),

@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Tier-1 CI: import hygiene for the repro.api layering + the full test suite.
+#
+#   scripts/ci.sh            # run everything
+#
+# The import checks run each entry point in a FRESH interpreter so
+# order-dependent circular imports can't hide behind a warmed sys.modules
+# (repro.api sits above repro.core and beside repro.kernels; ops.py shims
+# back into repro.api, which is only legal because core never imports api).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== import-cycle lint =="
+# layering rule: repro.core must never import repro.api (registry lives in
+# core precisely so the dependency points one way).
+if grep -rnE "^[^#]*(from|import) +repro\.api" src/repro/core; then
+    echo "FAIL: repro.core imports repro.api (layering violation)" >&2
+    exit 1
+fi
+# every entry point must import clean in isolation (both directions of the
+# kernels<->api shim seam, plus the consumers).
+for m in repro.api repro.core repro.kernels repro.kernels.ops \
+         repro.models.sparse_ffn repro.runtime.serve repro.models; do
+    python -c "import $m" || { echo "FAIL: import $m" >&2; exit 1; }
+done
+# the seam both ways in one process
+python -c "import repro.api, repro.kernels"
+python -c "import repro.kernels, repro.api"
+echo "import lint OK"
+
+echo "== tier-1 tests =="
+python -m pytest -x -q

@@ -1,0 +1,76 @@
+"""Backend dispatch for plan execution — replaces the ``ops.INTERPRET`` global.
+
+Three backends, one switch:
+
+* ``"pallas"``    — compiled Pallas kernels (TPU).
+* ``"interpret"`` — the same Pallas kernels in interpret mode (CPU-correct;
+  the default off-TPU so tests and laptops just work).
+* ``"reference"`` — the pure-jnp oracles from :mod:`repro.kernels.ref`
+  (differentiable everywhere; the parity baseline).
+
+The default resolves from the JAX platform once, can be overridden globally
+(:func:`set_default_backend`) or lexically (:func:`use_backend`).  Backend
+choice is resolved at trace time: functions jitted under ``use_backend`` bake
+the choice into their compiled executable.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Iterator, Optional, Tuple
+
+import jax
+
+BACKENDS: Tuple[str, ...] = ("pallas", "interpret", "reference")
+
+_default_backend: Optional[str] = None
+
+
+def _platform_default() -> str:
+    return "pallas" if jax.default_backend() == "tpu" else "interpret"
+
+
+def available_backends() -> Tuple[str, ...]:
+    return BACKENDS
+
+
+def default_backend() -> str:
+    """The backend used when none is passed explicitly."""
+    return _default_backend if _default_backend is not None else _platform_default()
+
+
+def set_default_backend(name: Optional[str]) -> None:
+    """Set the process-wide default backend (``None`` restores autodetect)."""
+    global _default_backend
+    if name is not None:
+        resolve_backend(name)
+    _default_backend = name
+
+
+def resolve_backend(name: Optional[str]) -> str:
+    """Validate ``name`` (or resolve the default when ``None``)."""
+    if name is None:
+        return default_backend()
+    if name not in BACKENDS:
+        raise ValueError(f"unknown backend {name!r}; available: {BACKENDS}")
+    return name
+
+
+@contextlib.contextmanager
+def use_backend(name: str) -> Iterator[str]:
+    """Lexically scope the default backend (e.g. force ``reference`` in a
+    parity test, or ``interpret`` while tracing a serving function on CPU)."""
+    global _default_backend
+    name = resolve_backend(name)
+    prev = _default_backend
+    _default_backend = name
+    try:
+        yield name
+    finally:
+        _default_backend = prev
+
+
+def backend_interpret_flag(name: str) -> bool:
+    """Map a pallas-family backend to the kernel ``interpret`` flag."""
+    if name == "reference":
+        raise ValueError("reference backend does not run Pallas kernels")
+    return name == "interpret"

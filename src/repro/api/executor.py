@@ -1,0 +1,185 @@
+"""Plan execution: backend dispatch + the one differentiable matmul path.
+
+``execute_plan`` runs a :class:`~repro.api.plan.SegmentPlan` on any backend
+(compiled Pallas, Pallas interpret, or the pure-jnp reference oracle).
+``apply_plan`` is the trainable entry point: a ``custom_vjp`` lifted out of
+the old ``models/sparse_ffn.py`` so serving and training share one executor —
+
+* forward:  ``y = W @ x``   (Segment SpMM under the plan's schedule);
+* ``dx = Wᵀ @ dy``          — another Segment SpMM under the plan's nested
+  transposed schedule (``plan.grad_plan``, built once, static);
+* ``dW[i] = dy[mᵢ] @ x[kᵢ]ᵀ`` — block-sampled SDDMM, pure jnp.
+
+The N-tile width is normalized in one place (:func:`pick_bn`): the executor
+either shrinks ``bn`` to the largest divisor of N or pads N up to a tile
+multiple and slices the result — arbitrary N is legal (the old
+``SpmmPlan.__call__`` crashed on any N not divisible by the tile width).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.segment_spgemm import segment_spgemm
+from repro.kernels.segment_spmm import segment_spmm
+
+from .backends import backend_interpret_flag, resolve_backend
+from .plan import SPGEMM, SPMM, SegmentPlan
+
+
+def pick_bn(n: int, bn: int) -> Tuple[int, int]:
+    """Normalize the N-tile width for an ``(…, N)`` right-hand side.
+
+    Returns ``(bn_eff, pad)`` with ``(n + pad) % bn_eff == 0``.  Prefers the
+    largest divisor of ``n`` that is ≤ ``bn`` when it keeps tiles reasonably
+    wide (at least half the request, or the full lane width); otherwise keeps
+    the requested width and zero-pads N (padded C columns are sliced off).
+    """
+    bn = max(1, min(bn, n))
+    if n % bn == 0:
+        return bn, 0
+    div = max(d for d in range(1, bn + 1) if n % d == 0)
+    if div >= max(bn // 2, min(128, n)):
+        return div, 0
+    return bn, (-n) % bn
+
+
+def _mask_dead_rows(plan: SegmentPlan, out: jax.Array) -> jax.Array:
+    # block rows with no nonzero A blocks are never visited by the grid —
+    # their output is undefined (may be NaN); zero them via where.
+    bm = plan.block_shape[0]
+    live = jnp.repeat(plan.row_mask > 0, bm)[:, None]
+    return jnp.where(live, out, jnp.zeros((), out.dtype))
+
+
+def _run_spmm(plan: SegmentPlan, x: jax.Array, *, backend: str,
+              blocks: Optional[jax.Array] = None, bn: int = 512,
+              out_dtype=jnp.float32) -> jax.Array:
+    """Execute an spmm plan (optionally with substituted block values)."""
+    blocks = plan.lhs_blocks if blocks is None else blocks
+    gm, gk = plan.grid
+    bm, bk = blocks.shape[1], blocks.shape[2]
+    if x.ndim != 2 or x.shape[0] != gk * bk:
+        raise ValueError(f"rhs must be (K={gk * bk}, N) dense, got {x.shape}")
+    if backend == "reference":
+        out = ref.spmm_ref(blocks, plan.m_idx, plan.k_idx, gm, gk, x)
+        return out.astype(out_dtype)
+    n = x.shape[1]
+    bn_eff, pad = pick_bn(n, bn)
+    xp = jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+    out = segment_spmm(
+        blocks, plan.m_idx, plan.k_idx, plan.seg_start, plan.seg_write,
+        plan.accum_prev, xp, grid_m=gm, bn=bn_eff,
+        interpret=backend_interpret_flag(backend), out_dtype=out_dtype)
+    if pad:
+        out = out[:, :n]
+    return _mask_dead_rows(plan, out)
+
+
+def _run_spgemm(plan: SegmentPlan, *, backend: str,
+                out_dtype=jnp.float32) -> jax.Array:
+    if backend == "reference":
+        out = ref.spgemm_ref(
+            plan.lhs_blocks, plan.a_brow, plan.a_bcol, plan.grid,
+            plan.rhs_blocks, plan.b_brow, plan.b_bcol, plan.rhs_grid,
+            plan.c_brow_arr, plan.c_bcol_arr)
+        return out.astype(out_dtype)
+    return segment_spgemm(
+        plan.lhs_blocks, plan.rhs_blocks, plan.a_idx, plan.b_idx, plan.c_idx,
+        plan.seg_start, plan.seg_write, plan.accum_prev,
+        n_c_blocks=plan.n_out_blocks,
+        interpret=backend_interpret_flag(backend), out_dtype=out_dtype)
+
+
+def execute_plan(plan: SegmentPlan, rhs=None, *, bn: int = 512,
+                 backend: Optional[str] = None, out_dtype=None) -> jax.Array:
+    """Forward-only plan execution (``plan(...)`` delegates here).
+
+    Backend resolution order: explicit argument > ``plan.backend`` > the
+    process default (:func:`repro.api.backends.default_backend`).
+    """
+    backend = resolve_backend(backend if backend is not None else plan.backend)
+    out_dtype = jnp.float32 if out_dtype is None else out_dtype
+    if plan.kind == SPMM:
+        if rhs is None:
+            raise ValueError("spmm plan needs a dense right-hand side")
+        return _run_spmm(plan, rhs, backend=backend, bn=bn, out_dtype=out_dtype)
+    if plan.kind == SPGEMM:
+        if rhs is not None:
+            raise ValueError("spgemm plan takes no right-hand side "
+                             "(B is frozen into the plan)")
+        return _run_spgemm(plan, backend=backend, out_dtype=out_dtype)
+    raise ValueError(f"unknown plan kind {plan.kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Differentiable path (custom VJP over the plan pytree)
+# ---------------------------------------------------------------------------
+
+
+def _zero_cotangent(tree):
+    """Structure-matching zero cotangent: float0 for integer leaves."""
+    def z(leaf):
+        if jnp.issubdtype(jnp.result_type(leaf), jnp.inexact):
+            return jnp.zeros_like(leaf)
+        return np.zeros(np.shape(leaf), jax.dtypes.float0)
+    return jax.tree_util.tree_map(z, tree)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _apply(backend: str, bn: int, plan: SegmentPlan, x: jax.Array):
+    out = _run_spmm(plan, x, backend=backend, bn=bn, out_dtype=jnp.float32)
+    return out.astype(x.dtype)
+
+
+def _apply_fwd(backend, bn, plan, x):
+    return _apply(backend, bn, plan, x), (plan, x)
+
+
+def _apply_bwd(backend, bn, res, dy):
+    plan, x = res
+    g = plan.grad_plan
+    if g is None:
+        raise ValueError("plan was built without with_grad=True; "
+                         "no transposed schedule available for the backward "
+                         "pass — rebuild via plan_matmul(..., with_grad=True)")
+    dyf = dy.astype(jnp.float32)
+    # dx = Wᵀ @ dy under the transposed schedule; gather_idx maps each
+    # transposed-schedule item back into the forward plan's block storage.
+    blocks_t = plan.lhs_blocks[g.gather_idx].transpose(0, 2, 1)
+    dx = _run_spmm(g, dyf, backend=backend, blocks=blocks_t, bn=bn,
+                   out_dtype=jnp.float32).astype(x.dtype)
+    # dW[i] = dy[m_i·bm:(m_i+1)·bm] @ x[k_i·bk:(k_i+1)·bk]ᵀ — block SDDMM.
+    # The result is already in the plan's storage (schedule) order.
+    bm, bk = plan.block_shape
+    gm, gk = plan.grid
+    dyb = dyf.reshape(gm, bm, -1)
+    xb = x.astype(jnp.float32).reshape(gk, bk, -1)
+    dW = jnp.einsum("imn,ikn->imk", dyb[plan.m_idx], xb[plan.k_idx])
+    dplan = _zero_cotangent(plan)
+    dplan = dplan.replace(lhs_blocks=dW.astype(plan.lhs_blocks.dtype))
+    return dplan, dx
+
+
+_apply.defvjp(_apply_fwd, _apply_bwd)
+
+
+def apply_plan(plan: SegmentPlan, x: jax.Array, *, bn: int = 512,
+               backend: Optional[str] = None) -> jax.Array:
+    """Differentiable ``y = W @ x`` for an spmm plan (``x``: ``(K, N)``).
+
+    Gradients flow to ``plan.lhs_blocks`` (the trainable block values, in
+    schedule order) and to ``x``; all schedule/index leaves get symbolic-zero
+    cotangents.  Requires the plan to carry a ``grad_plan`` (built by
+    ``plan_matmul(..., with_grad=True)``).
+    """
+    if plan.kind != SPMM:
+        raise ValueError("apply_plan supports spmm plans; execute spgemm "
+                         "plans via plan() / execute_plan")
+    backend = resolve_backend(backend if backend is not None else plan.backend)
+    return _apply(backend, bn, plan, x)

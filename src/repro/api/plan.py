@@ -1,0 +1,175 @@
+"""``SegmentPlan`` — the one plan abstraction, registered as a JAX pytree.
+
+A plan freezes everything a Segment-dataflow matmul needs at run time:
+
+* **leaves** (device arrays): the block values, the scalar-prefetch schedule
+  arrays (``seg_start``/``seg_write``/``accum_prev``), per-item block
+  coordinates, the row liveness mask, and — when the plan was built with
+  ``with_grad=True`` — a nested backward plan for the transposed schedule;
+* **static aux data** (hashable python values): grid sizes, block shape,
+  policy name, kind, the traffic estimate, and the pattern fingerprint.
+
+Because the plan is a pytree, it passes through ``jax.jit`` (as a traced
+argument), donation, and sharding like any other array container — this
+replaces the identity-hash ``_Static`` workaround the trainable layers used
+to need.  Aux data is hashable, so jit caches correctly key on the static
+schedule structure while the arrays stay dynamic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+SPMM = "spmm"
+SPGEMM = "spgemm"
+
+# Leaf fields, flattening order.  ``grad_plan`` is itself a SegmentPlan (a
+# child pytree); None fields flatten to zero leaves.
+_LEAF_FIELDS = (
+    "lhs_blocks", "rhs_blocks",
+    "m_idx", "k_idx",
+    "a_idx", "b_idx", "c_idx",
+    "seg_start", "seg_write", "accum_prev",
+    "row_mask",
+    "a_brow", "a_bcol", "b_brow", "b_bcol", "c_brow_arr", "c_bcol_arr",
+    "gather_idx",
+    "grad_plan",
+)
+_AUX_FIELDS = ("kind", "policy", "block_shape", "grid", "rhs_grid",
+               "n_out_blocks", "traffic_items", "fingerprint", "backend")
+
+
+@dataclasses.dataclass(eq=False)   # array fields make generated __eq__ ambiguous
+class SegmentPlan:
+    """Frozen Segment schedule + block values for one sparse matmul.
+
+    ``kind == "spmm"``: ``lhs_blocks`` are the A tiles **in schedule order**
+    (``m_idx``/``k_idx`` give each item's block coordinates); calling the
+    plan with a dense ``(K, N)`` right-hand side returns the dense
+    ``(M, N)`` product.
+
+    ``kind == "spgemm"``: ``lhs_blocks``/``rhs_blocks`` are the A/B tiles in
+    original BSR order, ``a_idx``/``b_idx``/``c_idx`` map schedule items to
+    block slots, and calling the plan returns the ``(n_out_blocks, bm, bn)``
+    C blocks at the symbolic pattern positions (``c_brow``/``c_bcol``).
+    """
+
+    # --- static aux data (hashable; part of the jit cache key) ---
+    kind: str
+    policy: str
+    block_shape: Tuple[int, int]                  # (bm, bk) of A tiles
+    grid: Tuple[int, int]                         # A's (grid_m, grid_k)
+    rhs_grid: Optional[Tuple[int, int]]           # B's (grid_k, grid_n) | None
+    n_out_blocks: int                             # spgemm: |C blocks|; spmm: grid_m
+    traffic_items: Tuple[Tuple[str, float], ...]  # frozen traffic estimate
+    fingerprint: str                              # pattern+policy hash
+    backend: Optional[str] = None                 # preferred backend | None=default
+
+    # --- pytree leaves (device arrays; None where not applicable) ---
+    lhs_blocks: Optional[jax.Array] = None
+    rhs_blocks: Optional[jax.Array] = None
+    m_idx: Optional[jax.Array] = None
+    k_idx: Optional[jax.Array] = None
+    a_idx: Optional[jax.Array] = None
+    b_idx: Optional[jax.Array] = None
+    c_idx: Optional[jax.Array] = None
+    seg_start: Optional[jax.Array] = None
+    seg_write: Optional[jax.Array] = None
+    accum_prev: Optional[jax.Array] = None
+    row_mask: Optional[jax.Array] = None
+    a_brow: Optional[jax.Array] = None
+    a_bcol: Optional[jax.Array] = None
+    b_brow: Optional[jax.Array] = None
+    b_bcol: Optional[jax.Array] = None
+    c_brow_arr: Optional[jax.Array] = None
+    c_bcol_arr: Optional[jax.Array] = None
+    gather_idx: Optional[jax.Array] = None
+    grad_plan: Optional["SegmentPlan"] = None
+
+    # ------------------------------------------------------------------
+    # pytree protocol
+    # ------------------------------------------------------------------
+
+    def tree_flatten(self):
+        children = tuple(getattr(self, f) for f in _LEAF_FIELDS)
+        aux = tuple(getattr(self, f) for f in _AUX_FIELDS)
+        return children, aux
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        kw: Dict[str, Any] = dict(zip(_AUX_FIELDS, aux))
+        kw.update(zip(_LEAF_FIELDS, children))
+        return cls(**kw)
+
+    # ------------------------------------------------------------------
+    # convenience surface
+    # ------------------------------------------------------------------
+
+    @property
+    def n_items(self) -> int:
+        return int(self.seg_start.shape[0])
+
+    @property
+    def traffic(self) -> Dict[str, float]:
+        """Revisiting-model HBM traffic estimate (see ``schedule_traffic``)."""
+        return dict(self.traffic_items)
+
+    @property
+    def grid_m(self) -> int:
+        return self.grid[0]
+
+    @property
+    def grid_k(self) -> int:
+        return self.grid[1]
+
+    @property
+    def n_c_blocks(self) -> int:
+        if self.kind != SPGEMM:
+            raise AttributeError("n_c_blocks is only defined for spgemm plans")
+        return self.n_out_blocks
+
+    @property
+    def c_brow(self) -> np.ndarray:
+        """Symbolic C pattern rows (spgemm), as host numpy."""
+        return np.asarray(self.c_brow_arr)
+
+    @property
+    def c_bcol(self) -> np.ndarray:
+        return np.asarray(self.c_bcol_arr)
+
+    def replace(self, **kw) -> "SegmentPlan":
+        return dataclasses.replace(self, **kw)
+
+    def with_values(self, lhs_blocks, rhs_blocks=None) -> "SegmentPlan":
+        """Same schedule, new block values (e.g. the current train params).
+
+        ``lhs_blocks`` must match the plan's storage layout: schedule order
+        for spmm plans, original BSR order for spgemm plans.
+        """
+        kw: Dict[str, Any] = {"lhs_blocks": lhs_blocks}
+        if rhs_blocks is not None:
+            kw["rhs_blocks"] = rhs_blocks
+        return dataclasses.replace(self, **kw)
+
+    def __call__(self, rhs=None, *, bn: int = 512, backend: Optional[str] = None,
+                 interpret: Optional[bool] = None, out_dtype=None):
+        """Execute the plan.
+
+        spmm: ``plan(b_dense)`` → dense ``(M, N)``.
+        spgemm: ``plan()`` → ``(n_out_blocks, bm, bn)`` C blocks.
+
+        ``interpret`` is a deprecated alias for ``backend`` kept for the old
+        ``ops.SpmmPlan``/``ops.SpgemmPlan`` call signature.
+        """
+        from . import executor  # local import: executor imports this module
+        if interpret is not None:
+            backend = "interpret" if interpret else "pallas"
+        return executor.execute_plan(self, rhs, bn=bn, backend=backend,
+                                     out_dtype=out_dtype)
+
+
+jax.tree_util.register_pytree_node(
+    SegmentPlan, SegmentPlan.tree_flatten, SegmentPlan.tree_unflatten)

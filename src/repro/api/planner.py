@@ -1,0 +1,263 @@
+"""``plan_matmul`` — the front door: pattern → :class:`SegmentPlan`.
+
+Planning is host-side numpy work (ordering, folding, finalization) that only
+depends on the *sparsity pattern*, not the block values — so plans are cached
+by a pattern fingerprint and re-realized with fresh values per call.  Static
+weight sparsity amortizes the scheduling cost exactly as DESIGN.md §2 argues;
+the cache makes that amortization automatic instead of manual.
+
+``plan_matmul(A, B_or_shape)`` dispatches on the right-hand side:
+
+* ``BSR``                    → SpGEMM plan (B frozen into the plan);
+* dense array / shape / int  → SpMM plan (the dense N is only a traffic
+  hint; any dense rhs with matching K can be passed at execution time);
+* ``with_grad=True``         → the plan additionally carries the transposed
+  schedule (``grad_plan``) so :func:`repro.api.executor.apply_plan` can run
+  the backward pass.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, Optional, Tuple, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.formats import BSR
+from repro.core.policies import get_policy
+from repro.core.schedule import (build_spgemm_schedule, build_spmm_schedule,
+                                 finalize_schedule, spgemm_schedule_traffic,
+                                 spmm_schedule_traffic)
+
+from .backends import resolve_backend
+from .plan import SPGEMM, SPMM, SegmentPlan
+
+
+def _freeze_traffic(traffic: dict) -> Tuple[Tuple[str, float], ...]:
+    return tuple(sorted(traffic.items()))
+
+
+def _scale_spmm_traffic(basis: dict, n_cols: int) -> dict:
+    """Re-price a unit-N traffic basis for a concrete dense width.
+
+    A-tile bytes are N-independent; B and C bytes scale linearly with the
+    dense column count (the basis is evaluated at ``n_cols=1``), so the
+    *schedule* — and therefore the plan cache entry — never depends on N.
+    """
+    b = basis["b_bytes"] * n_cols
+    c = basis["c_bytes"] * n_cols
+    return dict(a_bytes=basis["a_bytes"], b_bytes=b, c_bytes=c,
+                total=basis["a_bytes"] + b + c,
+                b_fetches=basis["b_fetches"], c_segments=basis["c_segments"])
+
+
+def _pattern_bytes(h, m: BSR) -> None:
+    h.update(np.asarray(m.shape, np.int64).tobytes())
+    h.update(np.asarray(m.block_shape, np.int64).tobytes())
+    h.update(np.ascontiguousarray(m.brow, np.int64).tobytes())
+    h.update(np.ascontiguousarray(m.bcol, np.int64).tobytes())
+
+
+def pattern_fingerprint(kind: str, policy_key: str, fold_len: Optional[int],
+                        with_grad: bool, *mats: BSR) -> str:
+    """Digest of everything the *schedule* depends on (never block values,
+    never the dense-N traffic hint).  ``policy_key`` should include the
+    policy's registration serial so re-registering a name under a different
+    ordering can't be served a stale schedule."""
+    h = hashlib.sha1()
+    h.update(f"{kind}|{policy_key}|{fold_len}|{with_grad}".encode())
+    for m in mats:
+        _pattern_bytes(h, m)
+    return h.hexdigest()
+
+
+@dataclasses.dataclass
+class _PlanTemplate:
+    """A value-free plan + the gather needed to fill fresh values.
+
+    Traffic is stored as a unit-N basis and re-priced per realize so one
+    template serves every dense width of the same pattern."""
+
+    plan: SegmentPlan                       # lhs/rhs_blocks are None
+    fwd_perm: Optional[np.ndarray]          # spmm: original → schedule order
+    traffic_basis: Optional[dict] = None        # spmm fwd, at n_cols=1
+    grad_traffic_basis: Optional[dict] = None   # spmm bwd, at n_cols=1
+
+    def realize(self, a: BSR, b: Optional[BSR], backend: Optional[str],
+                n_cols_hint: int) -> SegmentPlan:
+        if self.plan.kind == SPMM:
+            grad = self.plan.grad_plan
+            if grad is not None and self.grad_traffic_basis is not None:
+                grad = grad.replace(traffic_items=_freeze_traffic(
+                    _scale_spmm_traffic(self.grad_traffic_basis, n_cols_hint)))
+            return self.plan.replace(
+                lhs_blocks=jnp.asarray(a.blocks[self.fwd_perm]),
+                traffic_items=_freeze_traffic(
+                    _scale_spmm_traffic(self.traffic_basis, n_cols_hint)),
+                grad_plan=grad, backend=backend)
+        return self.plan.replace(lhs_blocks=jnp.asarray(a.blocks),
+                                 rhs_blocks=jnp.asarray(b.blocks),
+                                 backend=backend)
+
+
+_CACHE: Dict[str, _PlanTemplate] = {}
+_STATS = {"hits": 0, "misses": 0}
+
+
+def clear_plan_cache() -> None:
+    _CACHE.clear()
+    _STATS["hits"] = _STATS["misses"] = 0
+
+
+def plan_cache_stats() -> Dict[str, int]:
+    return dict(_STATS, size=len(_CACHE))
+
+
+def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
+                         with_grad: bool, fingerprint: str) -> _PlanTemplate:
+    sched = build_spmm_schedule(a, policy=policy, fold_len=fold_len)
+    fin = finalize_schedule(sched.seg_start, sched.m, n_slots=sched.n_m_blocks)
+    bm, bk = a.block_shape
+    fwd_perm = sched.a_idx.astype(np.int64)
+
+    grad_plan = None
+    gather_idx = None
+    grad_basis = None
+    if with_grad:
+        # transposed matrix Wᵀ: same blocks, coords swapped, re-sorted
+        # row-major; schedule it independently, then express its per-item
+        # block gather in the *forward plan's storage order* so the backward
+        # pass reads the same weight array (no duplicate copy).
+        t_order = np.lexsort((a.brow, a.bcol)).astype(np.int64)
+        wt = BSR(shape=(a.shape[1], a.shape[0]), block_shape=(bk, bm),
+                 brow=a.bcol[t_order].copy(), bcol=a.brow[t_order].copy(),
+                 blocks=np.empty((a.nblocks, bk, bm), np.float32))
+        t_sched = build_spmm_schedule(wt, policy=policy, fold_len=fold_len)
+        t_fin = finalize_schedule(t_sched.seg_start, t_sched.m,
+                                  n_slots=t_sched.n_m_blocks)
+        inv_fwd = np.zeros_like(fwd_perm)
+        inv_fwd[fwd_perm] = np.arange(fwd_perm.size)
+        gather_idx = inv_fwd[t_order[t_sched.a_idx.astype(np.int64)]]
+        grad_basis = spmm_schedule_traffic(t_sched, bk, bm, 1)
+        grad_plan = SegmentPlan(
+            kind=SPMM, policy=policy, block_shape=(bk, bm),
+            grid=(t_sched.n_m_blocks, t_sched.n_k_blocks), rhs_grid=None,
+            n_out_blocks=t_sched.n_m_blocks,
+            traffic_items=(),   # re-priced per realize from grad_basis
+            fingerprint=fingerprint + ":grad",
+            m_idx=jnp.asarray(t_sched.m), k_idx=jnp.asarray(t_sched.k),
+            seg_start=jnp.asarray(t_sched.seg_start),
+            seg_write=jnp.asarray(t_sched.seg_write),
+            accum_prev=jnp.asarray(t_fin.accum_prev),
+            row_mask=jnp.asarray(t_fin.row_mask),
+            gather_idx=jnp.asarray(gather_idx, jnp.int32))
+
+    plan = SegmentPlan(
+        kind=SPMM, policy=policy, block_shape=(bm, bk),
+        grid=(sched.n_m_blocks, sched.n_k_blocks), rhs_grid=None,
+        n_out_blocks=sched.n_m_blocks,
+        traffic_items=(),   # re-priced per realize from traffic_basis
+        fingerprint=fingerprint,
+        m_idx=jnp.asarray(sched.m), k_idx=jnp.asarray(sched.k),
+        seg_start=jnp.asarray(sched.seg_start),
+        seg_write=jnp.asarray(sched.seg_write),
+        accum_prev=jnp.asarray(fin.accum_prev),
+        row_mask=jnp.asarray(fin.row_mask),
+        grad_plan=grad_plan)
+    return _PlanTemplate(plan=plan, fwd_perm=fwd_perm,
+                         traffic_basis=spmm_schedule_traffic(sched, bm, bk, 1),
+                         grad_traffic_basis=grad_basis)
+
+
+def _build_spgemm_template(a: BSR, b: BSR, policy: str,
+                           fold_len: Optional[int],
+                           fingerprint: str) -> _PlanTemplate:
+    sched = build_spgemm_schedule(a, b, policy=policy, fold_len=fold_len)
+    fin = finalize_schedule(sched.seg_start, sched.c_idx)
+    bm, bk = a.block_shape
+    bn = b.block_shape[1]
+    plan = SegmentPlan(
+        kind=SPGEMM, policy=policy, block_shape=(bm, bk),
+        grid=a.grid, rhs_grid=b.grid, n_out_blocks=sched.n_c_blocks,
+        traffic_items=_freeze_traffic(
+            spgemm_schedule_traffic(sched, bm, bk, bn)),
+        fingerprint=fingerprint,
+        a_idx=jnp.asarray(sched.a_idx), b_idx=jnp.asarray(sched.b_idx),
+        c_idx=jnp.asarray(sched.c_idx),
+        seg_start=jnp.asarray(sched.seg_start),
+        seg_write=jnp.asarray(sched.seg_write),
+        accum_prev=jnp.asarray(fin.accum_prev),
+        a_brow=jnp.asarray(a.brow), a_bcol=jnp.asarray(a.bcol),
+        b_brow=jnp.asarray(b.brow), b_bcol=jnp.asarray(b.bcol),
+        c_brow_arr=jnp.asarray(sched.c_brow),
+        c_bcol_arr=jnp.asarray(sched.c_bcol))
+    return _PlanTemplate(plan=plan, fwd_perm=None)
+
+
+def _rhs_to_hint(a: BSR, b) -> Tuple[Optional[BSR], int]:
+    """Normalize ``B_or_shape`` → (BSR | None, n_cols_hint)."""
+    if b is None:
+        return None, 1024
+    if isinstance(b, BSR):
+        return b, b.shape[1]
+    if isinstance(b, int):
+        shape: Tuple[int, ...] = (a.shape[1], b)
+    elif isinstance(b, tuple):
+        shape = b
+    elif hasattr(b, "shape"):
+        shape = tuple(b.shape)
+    else:
+        raise TypeError(f"B_or_shape must be a BSR, dense array, shape tuple "
+                        f"or int N, got {type(b).__name__}")
+    if len(shape) != 2:
+        raise ValueError(f"dense rhs must be 2-D (K, N), got shape {shape}")
+    if shape[0] != a.shape[1]:
+        raise ValueError(f"rhs K={shape[0]} does not match A K={a.shape[1]}")
+    return None, int(shape[1])
+
+
+def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
+                backend: Optional[str] = None, fold_len: Optional[int] = None,
+                with_grad: bool = False, n_cols_hint: Optional[int] = None,
+                cache: bool = True) -> SegmentPlan:
+    """Plan a Segment-dataflow matmul for the sparsity pattern of ``a``.
+
+    Args:
+      a: the BSR left operand (pattern + values).
+      b_or_shape: ``BSR`` (SpGEMM), or the dense rhs / its ``(K, N)`` shape /
+        ``N`` (SpMM; only used as a traffic hint), or None.
+      policy: any name in the policy registry.
+      backend: preferred execution backend recorded on the plan (resolvable
+        later; ``None`` defers to the process default).
+      fold_len: temporal-fold cap on segment length (fold-capable policies).
+      with_grad: also build the transposed schedule so ``apply_plan`` can run
+        the backward pass (SpMM only).
+      n_cols_hint: overrides the traffic model's dense-N estimate.
+      cache: reuse the pattern-fingerprint plan cache.
+    """
+    if backend is not None:
+        resolve_backend(backend)   # fail fast on typos
+    pol = get_policy(policy)       # fail fast + serial for the cache key
+    b, hint = _rhs_to_hint(a, b_or_shape)
+    if n_cols_hint is not None:
+        hint = n_cols_hint
+    if b is not None and with_grad:
+        raise NotImplementedError("with_grad is only supported for SpMM plans")
+
+    kind = SPGEMM if b is not None else SPMM
+    mats = (a, b) if b is not None else (a,)
+    key = pattern_fingerprint(kind, f"{policy}#{pol.serial}", fold_len,
+                              with_grad, *mats)
+    tpl = _CACHE.get(key) if cache else None
+    if tpl is None:
+        if kind == SPMM:
+            tpl = _build_spmm_template(a, policy, fold_len, with_grad, key)
+        else:
+            tpl = _build_spgemm_template(a, b, policy, fold_len, key)
+        if cache:
+            _CACHE[key] = tpl
+            _STATS["misses"] += 1
+    else:
+        _STATS["hits"] += 1
+    return tpl.realize(a, b, backend, hint)

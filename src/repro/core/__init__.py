@@ -7,13 +7,18 @@ Public surface:
              static references in :mod:`repro.core.dataflows`
 * folding:   :func:`spatial_fold`, :func:`fold_segments`, :func:`balance_bins`
 * schedules: :func:`build_spmm_schedule`, :func:`build_spgemm_schedule`
+* policies:  :func:`register_policy`, :func:`get_policy`,
+             :func:`available_policies` (the dataflow configuration space)
 """
 from .formats import BSR, CSC, CSR, DCSR, csr_from_coo, random_csr, spgemm_reference
 from .selecta import SelectaState, run_selecta, selecta_stats
 from .segmentbc import VSpace, segment_spgemm_elementwise
 from .folding import balance_bins, fold_segments, round_robin_bins, spatial_fold, temporal_fold_spills
-from .schedule import (SpgemmSchedule, SpmmSchedule, build_spgemm_schedule,
-                       build_spmm_schedule, shard_schedule,
+from .policies import (SchedulePolicy, available_policies, get_policy,
+                       register_policy, unregister_policy)
+from .schedule import (SegmentFinalization, SpgemmSchedule, SpmmSchedule,
+                       build_spgemm_schedule, build_spmm_schedule,
+                       finalize_schedule, shard_schedule,
                        spgemm_schedule_traffic, spmm_schedule_traffic,
                        symbolic_spgemm)
 
@@ -23,7 +28,10 @@ __all__ = [
     "VSpace", "segment_spgemm_elementwise",
     "balance_bins", "fold_segments", "round_robin_bins", "spatial_fold",
     "temporal_fold_spills",
-    "SpgemmSchedule", "SpmmSchedule", "build_spgemm_schedule",
-    "build_spmm_schedule", "shard_schedule", "spgemm_schedule_traffic",
-    "spmm_schedule_traffic", "symbolic_spgemm",
+    "SchedulePolicy", "available_policies", "get_policy", "register_policy",
+    "unregister_policy",
+    "SegmentFinalization", "SpgemmSchedule", "SpmmSchedule",
+    "build_spgemm_schedule", "build_spmm_schedule", "finalize_schedule",
+    "shard_schedule", "spgemm_schedule_traffic", "spmm_schedule_traffic",
+    "symbolic_spgemm",
 ]

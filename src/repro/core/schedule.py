@@ -7,7 +7,8 @@ share operands**, because Pallas only re-fetches a block from HBM when its
 ``index_map`` result changes between sequential grid steps (revisiting rule).
 Schedule order therefore *is* the reuse mechanism.
 
-Policies (all compute identical results — only traffic/balance differ):
+Policies live in the :mod:`repro.core.policies` registry (all compute
+identical results — only traffic/balance differ):
 
 * ``"gustavson"`` — m-major static order (the best classic static dataflow
   for SpMM on TPU; paper §II baseline).
@@ -32,6 +33,7 @@ import numpy as np
 
 from .folding import balance_bins, fold_segments
 from .formats import BSR
+from .policies import available_policies, get_policy, register_policy
 
 
 @dataclasses.dataclass
@@ -148,32 +150,112 @@ def _segment_order(m: np.ndarray, k: np.ndarray) -> np.ndarray:
     return np.concatenate(order) if order else np.zeros(0, dtype=np.int64)
 
 
+# ---------------------------------------------------------------------------
+# Built-in policies.  ``segment`` reuses the SELECTA-adapted run chaining for
+# SpGEMM by treating the C slot as the "row" and k as the shared operand.
+# ---------------------------------------------------------------------------
+
+register_policy(
+    "segment",
+    spmm_order=_segment_order,
+    spgemm_order=lambda m, n, k, c: _segment_order(c, k),
+    supports_fold=True,
+    description="Paper's dynamic order: output-segment runs + SELECTA run "
+                "chaining + serpentine k + temporal folding",
+    overwrite=True)
+register_policy(
+    "gustavson",
+    spmm_order=lambda m, k: np.lexsort((k, m)),
+    spgemm_order=lambda m, n, k, c: np.lexsort((k, n, m)),
+    description="m-major static order (best classic static dataflow on TPU)",
+    overwrite=True)
+register_policy(
+    "outer",
+    spmm_order=lambda m, k: np.lexsort((m, k)),
+    spgemm_order=lambda m, n, k, c: np.lexsort((n, m, k)),
+    description="k-major static order (outer-product-like; B reuse, C thrash)",
+    overwrite=True)
+
+
+def _apply_fold(seg_start: np.ndarray, fold_len: Optional[int]) -> np.ndarray:
+    """Temporal folding: cap run length so no single output tile serializes
+    the pipeline; folded continuations re-start a segment (the kernel
+    read-modify-writes C on non-first sub-segments)."""
+    if fold_len is None or fold_len <= 0:
+        return seg_start
+    run_pos = np.zeros(seg_start.size, dtype=np.int64)
+    cnt = 0
+    for i in range(seg_start.size):
+        cnt = 0 if seg_start[i] else cnt + 1
+        run_pos[i] = cnt
+    refold = (run_pos > 0) & (run_pos % fold_len == 0)
+    return (seg_start.astype(bool) | refold).astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Schedule finalization (accum_prev / row_mask) — the one place where the
+# kernel-facing revisit bookkeeping is derived from seg_start flags
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class SegmentFinalization:
+    """Kernel-facing revisit bookkeeping derived from a finished schedule.
+
+    ``accum_prev[i]`` is 1 exactly when item ``i`` starts a segment whose
+    output tile was already written by an earlier segment (folded
+    continuation or non-contiguous revisit) — the kernel must read-modify-
+    write C instead of zero-initializing.  ``row_mask`` (when ``n_slots`` is
+    given) is 1.0 for output slots that receive any work; slots never visited
+    by the grid hold undefined memory and must be masked to zero.
+    """
+
+    accum_prev: np.ndarray              # (n_items,) int32
+    row_mask: Optional[np.ndarray]      # (n_slots,) float32 or None
+
+
+def finalize_schedule(seg_start: np.ndarray, owner: np.ndarray,
+                      n_slots: Optional[int] = None) -> SegmentFinalization:
+    """Derive ``accum_prev`` (+ optional ``row_mask``) for a schedule.
+
+    ``owner[i]`` is the output-tile id of item ``i`` — the block row ``m``
+    for SpMM, the C slot ``c_idx`` for SpGEMM.  This is the single
+    implementation of the derivation previously copy-pasted across
+    ``plan_spmm``/``plan_spgemm``/``sparse_ffn``.
+    """
+    seg_start = np.asarray(seg_start)
+    owner = np.asarray(owner)
+    if seg_start.shape != owner.shape:
+        raise ValueError(f"seg_start {seg_start.shape} and owner "
+                         f"{owner.shape} must have matching shapes")
+    accum_prev = np.zeros(owner.size, dtype=np.int32)
+    seen = set()
+    for i in np.nonzero(seg_start)[0]:
+        o = int(owner[i])
+        accum_prev[i] = 1 if o in seen else 0
+        seen.add(o)
+    row_mask = None
+    if n_slots is not None:
+        row_mask = np.zeros(n_slots, dtype=np.float32)
+        if owner.size:
+            row_mask[np.unique(owner)] = 1.0
+    return SegmentFinalization(accum_prev=accum_prev, row_mask=row_mask)
+
+
 def build_spmm_schedule(a: BSR, policy: str = "segment",
                         fold_len: Optional[int] = None) -> SpmmSchedule:
-    """Order the nonzero blocks of A into a kernel work list."""
+    """Order the nonzero blocks of A into a kernel work list.
+
+    ``policy`` names any entry in the :mod:`repro.core.policies` registry.
+    """
+    pol = get_policy(policy)
     m, k = a.brow.astype(np.int64), a.bcol.astype(np.int64)
     idx = np.arange(a.nblocks, dtype=np.int64)
-    if policy == "gustavson":
-        order = np.lexsort((k, m))
-    elif policy == "outer":
-        order = np.lexsort((m, k))
-    elif policy == "segment":
-        order = _segment_order(m, k)
-    else:
-        raise ValueError(f"unknown policy {policy!r}")
+    order = pol.spmm_order(m, k)
     m_o, k_o, idx_o = m[order], k[order], idx[order]
     seg_start = _runs_from_sorted(m_o)
-    if policy == "segment" and fold_len is not None and fold_len > 0:
-        # temporal folding: cap run length so no single output tile serializes
-        # the pipeline; folded continuations re-start a segment (the kernel
-        # read-modify-writes C on non-first sub-segments).
-        run_pos = np.zeros(m_o.size, dtype=np.int64)
-        cnt = 0
-        for i in range(m_o.size):
-            cnt = 0 if seg_start[i] else cnt + 1
-            run_pos[i] = cnt
-        refold = (run_pos > 0) & (run_pos % fold_len == 0)
-        seg_start = (seg_start.astype(bool) | refold).astype(np.int32)
+    if pol.supports_fold:
+        seg_start = _apply_fold(seg_start, fold_len)
     gm, gk = a.grid
     return SpmmSchedule(m=m_o.astype(np.int32), k=k_o.astype(np.int32),
                         a_idx=idx_o.astype(np.int32),
@@ -228,6 +310,7 @@ def symbolic_spgemm(a_mask: np.ndarray, b_mask: np.ndarray) -> Tuple[np.ndarray,
 
 def build_spgemm_schedule(a: BSR, b: BSR, policy: str = "segment",
                           fold_len: Optional[int] = None) -> SpgemmSchedule:
+    get_policy(policy)   # fail fast before the symbolic phase
     a_mask, b_mask = a.block_mask(), b.block_mask()
     c_brow, c_bcol = symbolic_spgemm(a_mask, b_mask)
     gn = b.grid[1]
@@ -254,27 +337,13 @@ def build_spgemm_schedule(a: BSR, b: BSR, policy: str = "segment",
     b_arr = np.asarray(bis, dtype=np.int64)
     c_arr = np.asarray(cis, dtype=np.int64)
 
-    if policy == "gustavson":           # output-major static: sort by (m, n, k)
-        order = np.lexsort((k_arr, n_arr, m_arr))
-    elif policy == "outer":             # k-major static
-        order = np.lexsort((n_arr, m_arr, k_arr))
-    elif policy == "segment":
-        # treat C slot as the "row" and k as the shared operand → reuse the
-        # SELECTA-adapted run chaining on (c_idx, k)
-        order = _segment_order(c_arr, k_arr)
-    else:
-        raise ValueError(f"unknown policy {policy!r}")
+    pol = get_policy(policy)
+    order = pol.spgemm_order(m_arr, n_arr, k_arr, c_arr)
 
     c_o = c_arr[order]
     seg_start = _runs_from_sorted(c_o)
-    if policy == "segment" and fold_len is not None and fold_len > 0:
-        run_pos = np.zeros(c_o.size, dtype=np.int64)
-        cnt = 0
-        for i in range(c_o.size):
-            cnt = 0 if seg_start[i] else cnt + 1
-            run_pos[i] = cnt
-        refold = (run_pos > 0) & (run_pos % fold_len == 0)
-        seg_start = (seg_start.astype(bool) | refold).astype(np.int32)
+    if pol.supports_fold:
+        seg_start = _apply_fold(seg_start, fold_len)
 
     return SpgemmSchedule(
         m=m_arr[order].astype(np.int32), n=n_arr[order].astype(np.int32),

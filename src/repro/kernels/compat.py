@@ -1,0 +1,13 @@
+"""Small shims across jax.experimental.pallas API renames.
+
+``pltpu.TPUCompilerParams`` became ``pltpu.CompilerParams`` in newer JAX;
+the kernels target the new name and fall back here so the same source runs
+on the container's pinned JAX.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+__all__ = ["CompilerParams"]

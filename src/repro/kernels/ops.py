@@ -1,152 +1,61 @@
 """Public jit'd wrappers around the Pallas kernels.
 
-``INTERPRET`` auto-selects Pallas interpret mode on CPU (this container) and
-compiled mode on TPU.  Schedule construction (numpy, per sparsity pattern)
-happens once in :func:`plan_spmm` / :func:`plan_spgemm`; the returned plans
-hold device arrays and are reusable across calls — static weight-sparsity
-patterns amortize exactly as DESIGN.md §2 argues.
+Plan construction moved to :mod:`repro.api` — :func:`plan_spmm` /
+:func:`plan_spgemm` remain as thin deprecation shims that delegate to
+``repro.api.plan_matmul`` and return the unified :class:`SegmentPlan`
+(call-compatible with the old ``SpmmPlan``/``SpgemmPlan``).
+
+``INTERPRET`` is likewise deprecated: backend selection (compiled /
+interpret / reference) now lives in :mod:`repro.api.backends`; the module
+global is kept only so old call sites keep working and mirrors the default
+backend at import time.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
+from repro.api.plan import SegmentPlan
+from repro.api.planner import plan_matmul
 from repro.core.formats import BSR
-from repro.core.schedule import (build_spgemm_schedule, build_spmm_schedule,
-                                 spgemm_schedule_traffic, spmm_schedule_traffic)
 from . import ref
 from .flash_attention import flash_attention
 from .moe_gemm import build_moe_chunks, moe_gemm
 from .rg_lru import rg_lru
-from .segment_spgemm import segment_spgemm
-from .segment_spmm import segment_spmm
 
 
 def _default_interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
-INTERPRET = _default_interpret()
+INTERPRET = _default_interpret()   # deprecated: see repro.api.backends
+
+# Deprecated aliases — both old plan classes are now the one SegmentPlan.
+SpmmPlan = SegmentPlan
+SpgemmPlan = SegmentPlan
 
 
-# ---------------------------------------------------------------------------
-# SpMM plan (sparse-weight layers)
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class SpmmPlan:
-    """Frozen Segment schedule + schedule-ordered blocks for BSR(A) @ B."""
-
-    blocks: jax.Array        # (n_items, bm, bk) schedule order
-    m_idx: jax.Array
-    k_idx: jax.Array
-    seg_start: jax.Array
-    seg_write: jax.Array
-    accum_prev: jax.Array
-    grid_m: int
-    grid_k: int
-    block_shape: tuple
-    policy: str
-    traffic: dict            # revisiting-model traffic estimate
-    row_mask: jax.Array = None  # (grid_m,) 1.0 where the block row has work
-
-    def __call__(self, b_dense, *, bn: int = 512, interpret: Optional[bool] = None,
-                 out_dtype=jnp.float32):
-        interpret = INTERPRET if interpret is None else interpret
-        n = b_dense.shape[1]
-        bn = min(bn, n)
-        out = segment_spmm(
-            self.blocks, self.m_idx, self.k_idx, self.seg_start,
-            self.seg_write, self.accum_prev, b_dense,
-            grid_m=self.grid_m, bn=bn, interpret=interpret, out_dtype=out_dtype)
-        # block rows with no nonzero A blocks are never visited by the grid —
-        # their output is undefined (may be NaN); zero them via where.
-        bm = self.block_shape[0]
-        live = jnp.repeat(self.row_mask > 0, bm)[:, None]
-        return jnp.where(live, out, jnp.zeros((), out.dtype))
+def _deprecated(old: str) -> None:
+    warnings.warn(f"repro.kernels.ops.{old} is deprecated; use "
+                  f"repro.api.plan_matmul", DeprecationWarning, stacklevel=3)
 
 
 def plan_spmm(a: BSR, policy: str = "segment", n_cols_hint: int = 1024,
-              fold_len: Optional[int] = None) -> SpmmPlan:
-    sched = build_spmm_schedule(a, policy=policy, fold_len=fold_len)
-    # accum_prev: a segment head whose m was already written must merge
-    seen = set()
-    accum_prev = np.zeros(sched.n_items, dtype=np.int32)
-    for i in np.nonzero(sched.seg_start)[0]:
-        m = int(sched.m[i])
-        accum_prev[i] = 1 if m in seen else 0
-        seen.add(m)
-    bm, bk = a.block_shape
-    row_mask = np.zeros(sched.n_m_blocks, dtype=np.float32)
-    row_mask[np.unique(sched.m)] = 1.0
-    return SpmmPlan(
-        blocks=jnp.asarray(a.blocks[sched.a_idx]),
-        m_idx=jnp.asarray(sched.m), k_idx=jnp.asarray(sched.k),
-        seg_start=jnp.asarray(sched.seg_start),
-        seg_write=jnp.asarray(sched.seg_write),
-        accum_prev=jnp.asarray(accum_prev),
-        grid_m=sched.n_m_blocks, grid_k=sched.n_k_blocks,
-        block_shape=a.block_shape, policy=policy,
-        traffic=spmm_schedule_traffic(sched, bm, bk, n_cols_hint),
-        row_mask=jnp.asarray(row_mask))
-
-
-# ---------------------------------------------------------------------------
-# SpGEMM plan
-# ---------------------------------------------------------------------------
-
-
-@dataclasses.dataclass
-class SpgemmPlan:
-    a_blocks: jax.Array
-    b_blocks: jax.Array
-    a_idx: jax.Array
-    b_idx: jax.Array
-    c_idx: jax.Array
-    seg_start: jax.Array
-    seg_write: jax.Array
-    accum_prev: jax.Array
-    c_brow: np.ndarray
-    c_bcol: np.ndarray
-    n_c_blocks: int
-    policy: str
-    traffic: dict
-
-    def __call__(self, *, interpret: Optional[bool] = None, out_dtype=jnp.float32):
-        interpret = INTERPRET if interpret is None else interpret
-        return segment_spgemm(
-            self.a_blocks, self.b_blocks, self.a_idx, self.b_idx, self.c_idx,
-            self.seg_start, self.seg_write, self.accum_prev,
-            n_c_blocks=self.n_c_blocks, interpret=interpret,
-            out_dtype=out_dtype)
+              fold_len: Optional[int] = None) -> SegmentPlan:
+    """Deprecated shim for :func:`repro.api.plan_matmul` (SpMM)."""
+    _deprecated("plan_spmm")
+    return plan_matmul(a, policy=policy, n_cols_hint=n_cols_hint,
+                       fold_len=fold_len)
 
 
 def plan_spgemm(a: BSR, b: BSR, policy: str = "segment",
-                fold_len: Optional[int] = None) -> SpgemmPlan:
-    sched = build_spgemm_schedule(a, b, policy=policy, fold_len=fold_len)
-    seen = set()
-    accum_prev = np.zeros(sched.n_items, dtype=np.int32)
-    for i in np.nonzero(sched.seg_start)[0]:
-        ci = int(sched.c_idx[i])
-        accum_prev[i] = 1 if ci in seen else 0
-        seen.add(ci)
-    bm, bk = a.block_shape
-    bn = b.block_shape[1]
-    return SpgemmPlan(
-        a_blocks=jnp.asarray(a.blocks), b_blocks=jnp.asarray(b.blocks),
-        a_idx=jnp.asarray(sched.a_idx), b_idx=jnp.asarray(sched.b_idx),
-        c_idx=jnp.asarray(sched.c_idx),
-        seg_start=jnp.asarray(sched.seg_start),
-        seg_write=jnp.asarray(sched.seg_write),
-        accum_prev=jnp.asarray(accum_prev),
-        c_brow=sched.c_brow, c_bcol=sched.c_bcol,
-        n_c_blocks=sched.n_c_blocks, policy=policy,
-        traffic=spgemm_schedule_traffic(sched, bm, bk, bn))
+                fold_len: Optional[int] = None) -> SegmentPlan:
+    """Deprecated shim for :func:`repro.api.plan_matmul` (SpGEMM)."""
+    _deprecated("plan_spgemm")
+    return plan_matmul(a, b, policy=policy, fold_len=fold_len)
 
 
 # ---------------------------------------------------------------------------

@@ -24,6 +24,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _kernel(a_idx, b_idx, c_idx, seg_start, seg_write, accum_prev,
             a_blocks, b_blocks, out, acc):
@@ -83,6 +85,6 @@ def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_c_blocks, bm, bn), out_dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
     )(a_idx, b_idx, c_idx, seg_start, seg_write, accum_prev, a_blocks, b_blocks)

@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .compat import CompilerParams
+
 
 def _kernel(m_idx, k_idx, seg_start, seg_write, accum_prev,
             a_blocks, b, out, acc):
@@ -97,6 +99,6 @@ def segment_spmm(a_blocks, m_idx, k_idx, seg_start, seg_write, accum_prev,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((grid_m * bm, n_dim), out_dtype),
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
     )(m_idx, k_idx, seg_start, seg_write, accum_prev, a_blocks, b_dense)

@@ -28,7 +28,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import REGISTRY, SHAPES, cell_is_live, get_config
-from repro.launch.mesh import make_production_mesh
+from repro.launch.mesh import make_production_mesh, mesh_context
 from repro.models import build_model, cache_specs, input_specs
 from repro.optim import AdamW, constant
 from repro.roofline.analysis import (collective_bytes, model_flops,
@@ -135,7 +135,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         metrics_sh = jax.tree.map(
             lambda _: NamedSharding(mesh, P()),
             {"loss": 0, "grad_norm": 0, "lr": 0})
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             lowered = jax.jit(
                 step, donate_argnums=(0,),
                 in_shardings=((param_sh, opt_sh), batch_sh),
@@ -150,7 +150,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             return logits[:, -1].astype(jnp.float32)   # last-position logits
         batch_sh = make_shardings(mesh, batch_pspecs(mesh, specs))
         dp = dp_axes(mesh)
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             lowered = jax.jit(
                 prefill, in_shardings=(param_sh, batch_sh),
                 out_shardings=NamedSharding(mesh, P(dp, "model")),
@@ -179,7 +179,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         logits_sh = NamedSharding(mesh, sanitize_pspec(
             mesh, P(dp, "model"),
             (specs["token"].shape[0], cfg.padded_vocab)))
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             lowered = jax.jit(
                 decode, donate_argnums=(1,),
                 in_shardings=(param_sh, cache_sh, tok_sh, pos_sh),

@@ -1,12 +1,34 @@
-"""Production mesh construction.
+"""Production mesh construction + small cross-version jax.sharding shims.
 
-A function (not a module-level constant) so importing this module never
+Functions (not module-level constants) so importing this module never
 touches jax device state — the dry-run pins the device count via XLA_FLAGS
 *before* any jax initialization.
+
+``jax.sharding.AxisType`` / ``jax.set_mesh`` only exist in newer JAX; on
+older versions every mesh axis is implicitly Auto and the ``Mesh`` object
+itself is the context manager, so the helpers degrade gracefully.
 """
 from __future__ import annotations
 
 import jax
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with explicit-Auto axis types where supported."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_context(mesh):
+    """``jax.set_mesh(mesh)`` on new JAX; the mesh's own resource-env
+    context manager on old JAX."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False, n_pods: int = 2):
@@ -15,11 +37,9 @@ def make_production_mesh(*, multi_pod: bool = False, n_pods: int = 2):
     to size state-dominated giants)."""
     shape = (n_pods, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return make_mesh(shape, axes)
 
 
 def make_test_mesh(n_data: int = 4, n_model: int = 2):
     """Small mesh for fake-device subprocess tests."""
-    return jax.make_mesh((n_data, n_model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((n_data, n_model), ("data", "model"))

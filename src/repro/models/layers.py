@@ -40,6 +40,40 @@ def dense_apply(p, x):
     return y
 
 
+def sparse_dense_init(key, d_in, d_out, *, block=64, density=0.25,
+                      policy="segment", dtype=jnp.float32):
+    """Block-sparse drop-in for :func:`dense_init` via :mod:`repro.api`.
+
+    Returns ``(plan, params)``: the static :class:`~repro.api.SegmentPlan`
+    (pass it to :func:`sparse_dense_apply`; it is a pytree, safe to close
+    over or thread through jit) and the trainable schedule-ordered blocks.
+
+    Both dims must be multiples of ``block`` — the Segment grid is exact,
+    so a ragged edge would silently widen the output with untrained
+    padding blocks.
+    """
+    from repro.api import plan_matmul
+    from repro.core.formats import BSR
+    if d_in % block or d_out % block:
+        raise ValueError(f"d_in={d_in} and d_out={d_out} must be multiples "
+                         f"of block={block}")
+    rng = np.random.default_rng(np.asarray(jax.random.key_data(key))[-1])
+    w = BSR.random(rng, (d_out, d_in), (block, block), density,
+                   dtype=np.float32)
+    plan = plan_matmul(w, policy=policy, with_grad=True)
+    scale = 1.0 / np.sqrt(d_in)
+    return plan, {"blocks": (plan.lhs_blocks * scale).astype(dtype)}
+
+
+def sparse_dense_apply(plan, p, x):
+    """``x: (..., d_in) → (..., d_out)`` through the Segment SpMM executor."""
+    from repro.api import apply_plan
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    y = apply_plan(plan.with_values(p["blocks"]), x2.T).T
+    return y.reshape(*shape[:-1], -1).astype(x.dtype)
+
+
 def rmsnorm_init(d, dtype=jnp.float32):
     return {"scale": jnp.ones((d,), dtype)}
 

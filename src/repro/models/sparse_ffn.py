@@ -1,8 +1,11 @@
 """Sparse-weight linear layers backed by the Segment SpMM kernel.
 
-Weights are stored block-sparse (BSR); the forward pass runs the
-Segment-scheduled Pallas SpMM (``repro.kernels.segment_spmm``) and training
-works through a custom VJP:
+Weights are stored block-sparse (BSR) and driven entirely through
+:mod:`repro.api`: the layer holds a :class:`~repro.api.SegmentPlan` built
+with ``with_grad=True`` (so the plan carries the transposed schedule for the
+backward pass) and the trainable parameters are the plan's block values in
+schedule order.  Forward and backward both run through
+:func:`repro.api.apply_plan` — the one ``custom_vjp`` shared with serving:
 
 * ``dx = Wᵀ @ dy``  — another Segment SpMM under the transposed schedule
   (built once, static);
@@ -11,135 +14,51 @@ works through a custom VJP:
 
 This is the paper's technique as a *first-class trainable layer*: prune a
 dense weight to blocks, keep the schedule fixed (static sparsity amortizes
-the scheduling cost, DESIGN.md §2), train the surviving blocks.
+the scheduling cost, DESIGN.md §2), train the surviving blocks.  The plan is
+a registered pytree, so layers jit/vmap/shard without the identity-hash
+``_Static`` wrapper this module used to define.
 """
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import SegmentPlan, apply_plan, plan_matmul
 from repro.core.formats import BSR
-from repro.core.schedule import build_spmm_schedule
-from repro.kernels.ops import INTERPRET
-from repro.kernels.segment_spmm import segment_spmm
-
-
-class _Static:
-    """Hashable identity wrapper so schedules ride nondiff_argnums."""
-
-    def __init__(self, **kw):
-        self.__dict__.update(kw)
-
-    def __hash__(self):
-        return id(self)
-
-    def __eq__(self, other):
-        return self is other
-
-
-def _make_sched_static(a: BSR, policy: str):
-    sched = build_spmm_schedule(a, policy=policy)
-    seen, accum = set(), np.zeros(sched.n_items, np.int32)
-    for i in np.nonzero(sched.seg_start)[0]:
-        m = int(sched.m[i])
-        accum[i] = 1 if m in seen else 0
-        seen.add(m)
-    row_mask = np.zeros(sched.n_m_blocks, np.float32)
-    row_mask[np.unique(sched.m)] = 1.0
-    return _Static(
-        m=jnp.asarray(sched.m), k=jnp.asarray(sched.k),
-        seg_start=jnp.asarray(sched.seg_start),
-        seg_write=jnp.asarray(sched.seg_write),
-        accum=jnp.asarray(accum),
-        perm=sched.a_idx,                      # original-order → schedule-order
-        grid_m=sched.n_m_blocks, grid_k=sched.n_k_blocks,
-        bm=a.block_shape[0], bk=a.block_shape[1],
-        row_mask=jnp.asarray(row_mask))
-
-
-@functools.partial(jax.custom_vjp, nondiff_argnums=(0, 1))
-def _sparse_matmul(fwd_s, bwd_s, blocks, x):
-    """y = W @ x with W = BSR(blocks under fwd_s schedule). x: (K, N)."""
-    return _sparse_matmul_fwd_impl(fwd_s, blocks, x)
-
-
-def _sparse_matmul_fwd_impl(s, blocks, x):
-    out = segment_spmm(
-        blocks[s.perm], s.m, s.k, s.seg_start, s.seg_write, s.accum, x,
-        grid_m=s.grid_m, bn=min(512, x.shape[1]), interpret=INTERPRET,
-        out_dtype=jnp.float32)
-    live = jnp.repeat(s.row_mask > 0, s.bm)[:, None]
-    return jnp.where(live, out, jnp.zeros((), out.dtype)).astype(x.dtype)
-
-
-def _sparse_matmul_fwd(fwd_s, bwd_s, blocks, x):
-    return _sparse_matmul(fwd_s, bwd_s, blocks, x), (blocks, x)
-
-
-def _sparse_matmul_bwd(fwd_s, bwd_s, res, dy):
-    blocks, x = res
-    # dx = Wᵀ @ dy: block i of Wᵀ is blockᵀ j of W with coords swapped;
-    # bwd_s.perm maps the transposed schedule directly into W's block list.
-    blocks_t = blocks.transpose(0, 2, 1)
-    out = segment_spmm(
-        blocks_t[bwd_s.perm], bwd_s.m, bwd_s.k, bwd_s.seg_start,
-        bwd_s.seg_write, bwd_s.accum, dy,
-        grid_m=bwd_s.grid_m, bn=min(512, dy.shape[1]), interpret=INTERPRET,
-        out_dtype=jnp.float32)
-    live = jnp.repeat(bwd_s.row_mask > 0, bwd_s.bm)[:, None]
-    dx = jnp.where(live, out, jnp.zeros((), out.dtype)).astype(x.dtype)
-    # dW_blocks[i] = dy[m_i·bm:(m_i+1)·bm] @ x[k_i·bk:(k_i+1)·bk]ᵀ (block SDDMM)
-    bm, bk = fwd_s.bm, fwd_s.bk
-    dyb = dy.reshape(fwd_s.grid_m, bm, -1)
-    xb = x.reshape(fwd_s.grid_k, bk, -1)
-    dW_sched = jnp.einsum("imn,ikn->imk", dyb[fwd_s.m], xb[fwd_s.k])
-    perm = jnp.asarray(fwd_s.perm)
-    inv = jnp.zeros_like(perm).at[perm].set(jnp.arange(perm.shape[0]))
-    dW = dW_sched[inv].astype(blocks.dtype)
-    return dW, dx
-
-
-_sparse_matmul.defvjp(_sparse_matmul_fwd, _sparse_matmul_bwd)
 
 
 @dataclasses.dataclass
 class SparseLinear:
     """W (d_out × d_in) block-sparse; apply computes x @ Wᵀ via W @ xᵀ."""
 
-    fwd_s: _Static
-    bwd_s: _Static
+    plan: SegmentPlan        # with_grad plan; lhs_blocks = init values
     d_out: int
     d_in: int
 
     @staticmethod
     def create(key, d_in, d_out, *, block=64, density=0.25,
                policy: str = "segment", dtype=jnp.float32):
+        if d_in % block or d_out % block:
+            raise ValueError(f"d_in={d_in} and d_out={d_out} must be "
+                             f"multiples of block={block}: the Segment grid "
+                             f"is exact and would pad the output otherwise")
         rng = np.random.default_rng(np.asarray(jax.random.key_data(key))[-1])
-        w = BSR.random(rng, (d_out, d_in), (block, block), density, dtype=np.float32)
-        wt = BSR(shape=(d_in, d_out), block_shape=(block, block),
-                 brow=w.bcol.copy(), bcol=w.brow.copy(),
-                 blocks=w.blocks.transpose(0, 2, 1))
-        wt = wt.row_major_order()
-        layer = SparseLinear(
-            fwd_s=_make_sched_static(w, policy),
-            bwd_s=_make_sched_static(wt, policy), d_out=d_out, d_in=d_in)
-        # the transposed schedule permutes the *transposed-matrix* block list;
-        # rebuild its perm to index W's own block order (coords swapped)
-        key_w = {(int(r), int(c)): i for i, (r, c) in enumerate(zip(w.brow, w.bcol))}
-        map_t_to_w = np.asarray([key_w[(int(c), int(r))]
-                                 for r, c in zip(wt.brow, wt.bcol)], np.int64)
-        layer.bwd_s.perm = map_t_to_w[layer.bwd_s.perm]
-        params = {"blocks": jnp.asarray(w.blocks, dtype)}
+        w = BSR.random(rng, (d_out, d_in), (block, block), density,
+                       dtype=np.float32)
+        plan = plan_matmul(w, policy=policy, with_grad=True)
+        layer = SparseLinear(plan=plan, d_out=d_out, d_in=d_in)
+        # trainable values live in the params dict, in schedule order (the
+        # plan's storage layout); the plan copy keeps the init values only
+        # as a template.
+        params = {"blocks": plan.lhs_blocks.astype(dtype)}
         return layer, params
 
     def apply(self, params, x2d):
         """x2d: (T, d_in) → (T, d_out)."""
-        yT = _sparse_matmul(self.fwd_s, self.bwd_s, params["blocks"], x2d.T)
+        yT = apply_plan(self.plan.with_values(params["blocks"]), x2d.T)
         return yT.T
 
 

@@ -36,8 +36,8 @@ def _sparse_mlp_params(key, sm: SparseMLP, dtype):
     """Fresh trainable blocks for the *shared* sparse schedule (all layers
     prune to the same block pattern; only values differ)."""
     def pb(k, lin):
-        n = len(lin.fwd_s.perm)
-        bm, bk = lin.fwd_s.bm, lin.fwd_s.bk
+        n = lin.plan.n_items
+        bm, bk = lin.plan.block_shape
         return {"blocks": jax.random.normal(k, (n, bm, bk), dtype)
                 / np.sqrt(lin.d_in)}
     k1, k2, k3 = jax.random.split(key, 3)

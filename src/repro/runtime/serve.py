@@ -4,6 +4,12 @@ A minimal production-shaped server: a request queue, fixed-size batch
 slots, chunked prefill into per-slot caches and lockstep batched decode
 (the decode step is the same function the dry-run lowers for the
 ``decode_32k`` / ``long_500k`` cells).
+
+Kernel backend selection goes through :mod:`repro.api.backends`: a server
+constructed with ``backend="interpret"`` (CPU correctness runs) or
+``backend="pallas"`` (TPU) traces its jitted step functions under that
+backend, so any Segment-plan layers in the model (block-sparse FFN) bake
+the right execution mode in — no module-global ``INTERPRET`` flag.
 """
 from __future__ import annotations
 
@@ -13,6 +19,8 @@ from typing import List, Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+from repro.api.backends import resolve_backend, use_backend
 
 
 @dataclasses.dataclass
@@ -26,12 +34,18 @@ class Server:
     """Greedy batched generation over a fixed slot count."""
 
     def __init__(self, model, params, *, batch_slots: int = 4,
-                 max_len: int = 512):
+                 max_len: int = 512, backend: Optional[str] = None):
         self.model = model
         self.params = params
         self.slots = batch_slots
         self.max_len = max_len
-        self._decode = jax.jit(model.decode_step)
+        self.backend = resolve_backend(backend)
+        self._decode = jax.jit(self._decode_step)
+
+    def _decode_step(self, params, cache, tok, pos):
+        # traced once; the backend context pins plan execution mode then
+        with use_backend(self.backend):
+            return self.model.decode_step(params, cache, tok, pos)
 
     def generate(self, requests: List[Request]) -> List[Request]:
         for group in range(0, len(requests), self.slots):
@@ -46,8 +60,9 @@ class Server:
         for i, r in enumerate(batch):
             prompts[i, :r.prompt.shape[0]] = r.prompt   # left-aligned
         # prefill: feed the prompt through the decode path token-group-wise
-        logits, cache = self.model.decode_step(
-            self.params, cache, jnp.asarray(prompts), jnp.int32(0))
+        with use_backend(self.backend):
+            logits, cache = self.model.decode_step(
+                self.params, cache, jnp.asarray(prompts), jnp.int32(0))
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)[:, None]
         max_new = max(r.max_new_tokens for r in batch)
         outs = [np.asarray(tok)]

@@ -131,9 +131,13 @@ class Trainer:
                 step=NamedSharding(mesh, P()),
                 m=make_shardings(mesh, pspecs, self.state[1].m),
                 v=make_shardings(mesh, pspecs, self.state[1].v))
+            # pin outputs to the same shardings as inputs: the state is
+            # donated and fed straight back in, so compiler-chosen output
+            # shardings would mismatch in_shardings on the second call.
             self._step_fn = jax.jit(
                 self._step_fn, donate_argnums=(0,),
-                in_shardings=((p_sh, opt_sh), None))
+                in_shardings=((p_sh, opt_sh), None),
+                out_shardings=((p_sh, opt_sh), None))
 
     def run(self, failure_hook: Optional[Callable[[int], None]] = None
             ) -> Dict[str, Any]:

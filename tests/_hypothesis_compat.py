@@ -1,0 +1,44 @@
+"""Import guard for the optional ``hypothesis`` dependency.
+
+Test modules import the property-testing decorators from here instead of
+hard-importing ``hypothesis`` (which killed the whole suite at collection
+when it wasn't installed).  With hypothesis present this is a pass-through;
+without it, ``@given`` property tests become skips (via
+``pytest.importorskip`` at call time, so the skip reason is the standard
+missing-module message) while every plain test in the module still runs.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # deliberately NOT functools.wraps: the replacement must expose a
+            # zero-arg signature or pytest would treat the strategy kwargs as
+            # missing fixtures and error instead of skipping.
+            def skipper():
+                pytest.importorskip("hypothesis")
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            skipper.__module__ = fn.__module__
+            return skipper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        return lambda fn: fn
+
+    class _Strategies:
+        """Placeholder strategies: inert objects, never drawn from."""
+
+        def __getattr__(self, name):
+            return lambda *a, **kw: None
+
+    st = _Strategies()
+
+__all__ = ["HAVE_HYPOTHESIS", "given", "settings", "st"]

@@ -1,0 +1,314 @@
+"""repro.api surface: pytree plans, jit transparency, policy registry,
+backend parity, the plan cache, N-tiling, and custom-VJP grads."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.formats import BSR
+
+RNG = np.random.default_rng(0)
+
+
+def _patterns():
+    """Square, non-square, and empty-block-row BSR patterns."""
+    sq = BSR.random(np.random.default_rng(1), (128, 128), (32, 32), 0.4)
+    rect = BSR.random(np.random.default_rng(2), (96, 160), (32, 32), 0.3)
+    # empty block rows: zero out two of four row-blocks before tiling
+    d = np.random.default_rng(3).standard_normal((128, 96)).astype(np.float32)
+    d[0:32] = 0.0
+    d[64:96] = 0.0
+    holes = BSR.from_dense(d, (32, 32))
+    return {"square": sq, "nonsquare": rect, "empty_rows": holes}
+
+
+# ---------------------------------------------------------------------------
+# pytree + jit
+# ---------------------------------------------------------------------------
+
+
+def test_segment_plan_pytree_roundtrip():
+    a = _patterns()["nonsquare"]
+    plan = api.plan_matmul(a, (a.shape[1], 64), with_grad=True)
+    leaves, treedef = jax.tree_util.tree_flatten(plan)
+    assert len(leaves) > 0 and all(hasattr(l, "shape") for l in leaves)
+    plan2 = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert plan2.policy == plan.policy
+    assert plan2.grid == plan.grid
+    assert plan2.fingerprint == plan.fingerprint
+    assert plan2.grad_plan is not None
+    x = jnp.asarray(RNG.standard_normal((a.shape[1], 64)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(plan2(x)), np.asarray(plan(x)),
+                               rtol=1e-5, atol=1e-5)
+    # flattening is lossless under tree_map identity too
+    plan3 = jax.tree_util.tree_map(lambda l: l, plan)
+    assert jax.tree_util.tree_structure(plan3) == treedef
+
+
+@pytest.mark.parametrize("policy", ["segment", "gustavson", "outer"])
+def test_jitted_function_takes_plan_argument(policy):
+    for name, a in _patterns().items():
+        plan = api.plan_matmul(a, policy=policy)
+        x = jnp.asarray(
+            RNG.standard_normal((a.shape[1], 64)).astype(np.float32))
+
+        @jax.jit
+        def run(p, xx):
+            return api.execute_plan(p, xx, bn=64)
+
+        got = np.asarray(run(plan, x))
+        want = a.to_dense() @ np.asarray(x)
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"{policy}/{name}")
+
+
+# ---------------------------------------------------------------------------
+# policy registry
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_policy_rejected():
+    a = _patterns()["square"]
+    with pytest.raises(ValueError, match="unknown policy"):
+        api.plan_matmul(a, policy="definitely-not-a-policy")
+    with pytest.raises(ValueError, match="unknown policy"):
+        api.get_policy("nope")
+
+
+def test_register_custom_policy_roundtrip():
+    name = "test-reverse-gustavson"
+    api.register_policy(
+        name,
+        spmm_order=lambda m, k: np.lexsort((k, m))[::-1],
+        spgemm_order=lambda m, n, k, c: np.lexsort((k, n, m))[::-1],
+        overwrite=True)
+    try:
+        assert name in api.available_policies()
+        a = _patterns()["square"]
+        plan = api.plan_matmul(a, policy=name)
+        x = jnp.asarray(
+            RNG.standard_normal((a.shape[1], 32)).astype(np.float32))
+        np.testing.assert_allclose(np.asarray(plan(x, bn=32)),
+                                   a.to_dense() @ np.asarray(x),
+                                   rtol=1e-4, atol=1e-4)
+        with pytest.raises(ValueError, match="already registered"):
+            api.register_policy(name, spmm_order=lambda m, k: None,
+                                spgemm_order=lambda m, n, k, c: None)
+    finally:
+        api.unregister_policy(name)
+    assert name not in api.available_policies()
+
+
+def test_reregistered_policy_is_not_served_stale_plans():
+    """The cache keys on the policy's registration serial, so redefining a
+    name yields a fresh schedule instead of the old definition's."""
+    name = "test-volatile"
+    a = _patterns()["square"]
+    try:
+        api.register_policy(
+            name, spmm_order=lambda m, k: np.lexsort((k, m)),
+            spgemm_order=lambda m, n, k, c: np.lexsort((k, n, m)),
+            overwrite=True)
+        p1 = api.plan_matmul(a, policy=name)
+        api.register_policy(
+            name, spmm_order=lambda m, k: np.lexsort((k, m))[::-1],
+            spgemm_order=lambda m, n, k, c: np.lexsort((k, n, m))[::-1],
+            overwrite=True)
+        p2 = api.plan_matmul(a, policy=name)
+        assert not np.array_equal(np.asarray(p1.m_idx), np.asarray(p2.m_idx))
+        np.testing.assert_array_equal(np.asarray(p1.m_idx),
+                                      np.asarray(p2.m_idx)[::-1])
+    finally:
+        api.unregister_policy(name)
+
+
+# ---------------------------------------------------------------------------
+# backends
+# ---------------------------------------------------------------------------
+
+
+def test_unknown_backend_rejected():
+    with pytest.raises(ValueError, match="unknown backend"):
+        api.resolve_backend("tpu-magic")
+    a = _patterns()["square"]
+    with pytest.raises(ValueError, match="unknown backend"):
+        api.plan_matmul(a, backend="tpu-magic")
+
+
+def test_backend_context_and_default():
+    base = api.default_backend()
+    assert base in api.available_backends()
+    with api.use_backend("reference"):
+        assert api.default_backend() == "reference"
+    assert api.default_backend() == base
+
+
+@pytest.mark.parametrize("policy", ["segment", "gustavson", "outer"])
+def test_spmm_backend_parity(policy):
+    """Pallas-interpret and the jnp reference oracle agree on every
+    pattern class (square / non-square / empty block rows)."""
+    for name, a in _patterns().items():
+        plan = api.plan_matmul(a, policy=policy)
+        x = jnp.asarray(
+            RNG.standard_normal((a.shape[1], 96)).astype(np.float32))
+        y_int = np.asarray(plan(x, bn=32, backend="interpret"))
+        y_ref = np.asarray(plan(x, backend="reference"))
+        np.testing.assert_allclose(y_int, y_ref, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"{policy}/{name}")
+        np.testing.assert_allclose(y_ref, a.to_dense() @ np.asarray(x),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("policy", ["segment", "gustavson"])
+def test_spgemm_backend_parity(policy):
+    a = BSR.random(np.random.default_rng(5), (128, 160), (32, 32), 0.3)
+    b = BSR.random(np.random.default_rng(6), (160, 96), (32, 32), 0.3)
+    plan = api.plan_matmul(a, b, policy=policy)
+    got_int = np.asarray(plan(backend="interpret"))
+    got_ref = np.asarray(plan(backend="reference"))
+    np.testing.assert_allclose(got_int, got_ref, rtol=1e-4, atol=1e-4)
+    want = a.to_dense() @ b.to_dense()
+    for i, (r, c) in enumerate(zip(plan.c_brow, plan.c_bcol)):
+        np.testing.assert_allclose(
+            got_ref[i], want[r * 32:(r + 1) * 32, c * 32:(c + 1) * 32],
+            rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# N-tiling (the old ``n % bn == 0`` crash)
+# ---------------------------------------------------------------------------
+
+
+def test_pick_bn_divisor_and_pad():
+    bn, pad = api.pick_bn(384, 512)      # divisor path: shrink to N
+    assert bn == 384 and pad == 0
+    bn, pad = api.pick_bn(384, 256)      # divisor path: largest divisor
+    assert bn == 192 and pad == 0
+    bn, pad = api.pick_bn(251, 128)      # prime N: pad-and-slice
+    assert pad > 0 and (251 + pad) % bn == 0
+    bn, pad = api.pick_bn(64, 512)       # bn clamped to N
+    assert bn == 64 and pad == 0
+
+
+@pytest.mark.parametrize("n", [384, 250, 251, 100])
+def test_spmm_arbitrary_n(n):
+    a = _patterns()["square"]
+    plan = api.plan_matmul(a)
+    x = jnp.asarray(RNG.standard_normal((a.shape[1], n)).astype(np.float32))
+    got = np.asarray(plan(x, bn=512))
+    np.testing.assert_allclose(got, a.to_dense() @ np.asarray(x),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_legacy_shim_arbitrary_n():
+    """The deprecated ops.plan_spmm path inherits the N-tiling fix."""
+    from repro.kernels import ops
+    a = _patterns()["square"]
+    with pytest.deprecated_call():
+        plan = ops.plan_spmm(a)
+    x = jnp.asarray(RNG.standard_normal((a.shape[1], 384)).astype(np.float32))
+    got = np.asarray(plan(x, bn=512))
+    np.testing.assert_allclose(got, a.to_dense() @ np.asarray(x),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+
+def test_plan_cache_hits_and_fresh_values():
+    api.clear_plan_cache()
+    a = BSR.random(np.random.default_rng(7), (64, 64), (32, 32), 0.9)
+    p1 = api.plan_matmul(a)
+    s1 = api.plan_cache_stats()
+    assert s1["misses"] == 1 and s1["hits"] == 0
+    # same pattern, different values: cache hit, values re-realized
+    a2 = BSR(a.shape, a.block_shape, a.brow.copy(), a.bcol.copy(),
+             a.blocks * 3.0)
+    p2 = api.plan_matmul(a2)
+    s2 = api.plan_cache_stats()
+    assert s2["hits"] == 1 and s2["misses"] == 1
+    assert p2.fingerprint == p1.fingerprint
+    x = jnp.asarray(RNG.standard_normal((64, 32)).astype(np.float32))
+    np.testing.assert_allclose(np.asarray(p2(x, bn=32)),
+                               3.0 * np.asarray(p1(x, bn=32)),
+                               rtol=1e-4, atol=1e-4)
+    # different policy -> different fingerprint, miss
+    api.plan_matmul(a, policy="outer")
+    assert api.plan_cache_stats()["misses"] == 2
+    api.clear_plan_cache()
+    assert api.plan_cache_stats()["size"] == 0
+
+
+def test_plan_cache_shared_across_dense_widths():
+    """The dense-N hint prices the traffic estimate but never the schedule:
+    plans for the same pattern at different N share one cache entry."""
+    api.clear_plan_cache()
+    a = BSR.random(np.random.default_rng(12), (64, 64), (32, 32), 0.9)
+    p1 = api.plan_matmul(a, (64, 64))
+    p2 = api.plan_matmul(a, (64, 640))
+    s = api.plan_cache_stats()
+    assert s["misses"] == 1 and s["hits"] == 1
+    # traffic still reflects each caller's N
+    assert p2.traffic["total"] > p1.traffic["total"]
+    assert p2.traffic["b_fetches"] == p1.traffic["b_fetches"]
+    api.clear_plan_cache()
+
+
+# ---------------------------------------------------------------------------
+# custom VJP
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", ["interpret", "reference"])
+def test_apply_plan_grads_match_dense(backend):
+    a = BSR.random(np.random.default_rng(8), (96, 128), (32, 32), 0.4)
+    plan = api.plan_matmul(a, with_grad=True)
+    x = jnp.asarray(RNG.standard_normal((128, 48)).astype(np.float32))
+
+    def loss(blocks, xx):
+        return jnp.sum(api.apply_plan(plan.with_values(blocks), xx,
+                                      backend=backend) ** 2)
+
+    gb, gx = jax.grad(loss, argnums=(0, 1))(plan.lhs_blocks, x)
+
+    w = jnp.asarray(a.to_dense())
+    gw, gx_d = jax.grad(
+        lambda w_, xx: jnp.sum((w_ @ xx) ** 2), argnums=(0, 1))(w, x)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_d),
+                               rtol=1e-3, atol=1e-3)
+    m_idx, k_idx = np.asarray(plan.m_idx), np.asarray(plan.k_idx)
+    gwn = np.asarray(gw)
+    gbn = np.asarray(gb)
+    for j in range(plan.n_items):
+        r, c = int(m_idx[j]), int(k_idx[j])
+        np.testing.assert_allclose(
+            gbn[j], gwn[r * 32:(r + 1) * 32, c * 32:(c + 1) * 32],
+            rtol=1e-3, atol=1e-3)
+
+
+def test_apply_plan_without_grad_plan_raises():
+    a = _patterns()["square"]
+    plan = api.plan_matmul(a)   # no with_grad
+    x = jnp.asarray(RNG.standard_normal((a.shape[1], 32)).astype(np.float32))
+    with pytest.raises(ValueError, match="with_grad"):
+        jax.grad(lambda xx: jnp.sum(api.apply_plan(plan, xx)))(x)
+
+
+def test_apply_plan_rejects_spgemm():
+    a = BSR.random(np.random.default_rng(9), (64, 64), (32, 32), 0.5)
+    b = BSR.random(np.random.default_rng(10), (64, 64), (32, 32), 0.5)
+    plan = api.plan_matmul(a, b)
+    with pytest.raises(ValueError, match="spmm"):
+        api.apply_plan(plan, jnp.zeros((64, 32)))
+
+
+def test_plan_matmul_shape_validation():
+    a = _patterns()["square"]
+    with pytest.raises(ValueError, match="does not match"):
+        api.plan_matmul(a, (a.shape[1] + 32, 64))
+    with pytest.raises(NotImplementedError):
+        b = BSR.random(np.random.default_rng(11), (128, 64), (32, 32), 0.5)
+        api.plan_matmul(a, b, with_grad=True)

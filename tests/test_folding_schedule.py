@@ -1,13 +1,13 @@
 """Folding + TPU block-schedule tests."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional-dep guard
 
 from repro.core.folding import (balance_bins, fold_segments, round_robin_bins,
                                 spatial_fold, temporal_fold_spills)
 from repro.core.formats import BSR
 from repro.core.schedule import (build_spgemm_schedule, build_spmm_schedule,
-                                 spgemm_schedule_traffic, spmm_schedule_traffic,
-                                 symbolic_spgemm)
+                                 finalize_schedule, spgemm_schedule_traffic,
+                                 spmm_schedule_traffic, symbolic_spgemm)
 
 
 def test_spatial_fold_reduces_spills():
@@ -38,6 +38,54 @@ def test_lpt_beats_round_robin():
     _, lpt = balance_bins(sizes, 16)
     _, rr = round_robin_bins(sizes, 16)
     assert lpt["imbalance"] <= rr["imbalance"] + 1e-9
+
+
+# --- schedule finalization (accum_prev / row_mask derivation) ----------------
+
+
+def test_finalize_schedule_accum_prev_marks_revisits():
+    # segments at items 0, 2, 4; owner 1 re-started at item 4 must accumulate
+    seg_start = np.array([1, 0, 1, 0, 1, 0], np.int32)
+    owner = np.array([1, 1, 3, 3, 1, 1], np.int32)
+    fin = finalize_schedule(seg_start, owner, n_slots=5)
+    np.testing.assert_array_equal(fin.accum_prev, [0, 0, 0, 0, 1, 0])
+    np.testing.assert_array_equal(fin.row_mask, [0.0, 1.0, 0.0, 1.0, 0.0])
+
+
+def test_finalize_schedule_no_revisits_without_refolds():
+    seg_start = np.array([1, 0, 1, 1], np.int32)
+    owner = np.array([0, 0, 1, 2], np.int32)
+    fin = finalize_schedule(seg_start, owner)
+    assert fin.accum_prev.sum() == 0
+    assert fin.row_mask is None
+
+
+def test_finalize_schedule_empty_and_mismatch():
+    fin = finalize_schedule(np.zeros(0, np.int32), np.zeros(0, np.int32),
+                            n_slots=3)
+    assert fin.accum_prev.size == 0
+    np.testing.assert_array_equal(fin.row_mask, [0.0, 0.0, 0.0])
+    try:
+        finalize_schedule(np.zeros(3, np.int32), np.zeros(2, np.int32))
+    except ValueError:
+        pass
+    else:
+        raise AssertionError("shape mismatch must raise")
+
+
+def test_finalize_schedule_matches_folded_spmm():
+    """On a real folded schedule, every accum_prev item re-visits an owner
+    that an earlier segment already wrote."""
+    a = BSR.random(np.random.default_rng(7), (256, 256), (16, 16), 0.6)
+    s = build_spmm_schedule(a, "segment", fold_len=4)
+    fin = finalize_schedule(s.seg_start, s.m, n_slots=s.n_m_blocks)
+    heads = np.nonzero(s.seg_start)[0]
+    seen = set()
+    for h in heads:
+        m = int(s.m[h])
+        assert fin.accum_prev[h] == (1 if m in seen else 0)
+        seen.add(m)
+    assert fin.accum_prev[~s.seg_start.astype(bool)].sum() == 0
 
 
 # --- block schedules ---------------------------------------------------------

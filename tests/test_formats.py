@@ -1,6 +1,6 @@
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional-dep guard
 
 from repro.core.formats import (BSR, CSC, CSR, DCSR, csr_from_coo, random_csr,
                                 spgemm_reference)

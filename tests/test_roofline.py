@@ -20,8 +20,8 @@ def test_collective_parser_on_real_hlo():
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
         from repro.roofline.analysis import collective_bytes
-        mesh = jax.make_mesh((8,), ('d',),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ('d',))
         def f(x):
             return jax.lax.psum(x, 'd')
         g = shard_map(f, mesh=mesh, in_specs=P('d'), out_specs=P())

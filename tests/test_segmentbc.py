@@ -1,7 +1,7 @@
 """SEGMENTBC / V-space invariants (paper §III-B) + correctness."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional-dep guard
 
 from repro.core.formats import CSC, random_csr
 from repro.core.segmentbc import VSpace, segment_spgemm_elementwise

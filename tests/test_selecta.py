@@ -1,6 +1,6 @@
 """SELECTA (Algorithm 1) invariants — unit + hypothesis property tests."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st  # optional-dep guard
 
 from repro.core.formats import CSC, random_csr
 from repro.core.selecta import SelectaState, run_selecta, selecta_stats

@@ -1,4 +1,9 @@
-"""Segment SpMM layer: forward + custom VJP vs dense-masked autodiff oracle."""
+"""Segment SpMM layer: forward + custom VJP vs dense-masked autodiff oracle.
+
+The layer is backed by ``repro.api``: its plan is a pytree and the trainable
+blocks live in the params dict in schedule order (``plan.m_idx``/``k_idx``
+give each block's coordinates directly — no perm indirection).
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -7,16 +12,16 @@ from repro.models.sparse_ffn import SparseLinear, SparseMLP
 
 
 def _dense_of(layer, params):
-    """Reassemble the dense weight from BSR blocks (original order)."""
-    s = layer.fwd_s
-    bm, bk = s.bm, s.bk
-    w = np.zeros((s.grid_m * bm, s.grid_k * bk), np.float32)
+    """Reassemble the dense weight from the schedule-ordered blocks."""
+    p = layer.plan
+    bm, bk = p.block_shape
+    gm, gk = p.grid
+    w = np.zeros((gm * bm, gk * bk), np.float32)
     blocks = np.asarray(params["blocks"], np.float32)
-    # fwd_s.m/k are in schedule order over perm'd blocks
-    perm = np.asarray(s.perm)
-    for j in range(len(perm)):
-        r, c = int(np.asarray(s.m)[j]), int(np.asarray(s.k)[j])
-        w[r * bm:(r + 1) * bm, c * bk:(c + 1) * bk] = blocks[perm[j]]
+    m_idx, k_idx = np.asarray(p.m_idx), np.asarray(p.k_idx)
+    for j in range(p.n_items):
+        r, c = int(m_idx[j]), int(k_idx[j])
+        w[r * bm:(r + 1) * bm, c * bk:(c + 1) * bk] = blocks[j]
     return w[: layer.d_out, : layer.d_in]
 
 
@@ -49,15 +54,46 @@ def test_sparse_linear_grads_vs_dense_masked():
     np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_dense),
                                rtol=1e-3, atol=1e-3)
     # block grads must equal the dense grad restricted to the block pattern
-    s = layer.fwd_s
-    perm = np.asarray(s.perm)
+    p = layer.plan
+    m_idx, k_idx = np.asarray(p.m_idx), np.asarray(p.k_idx)
     gw = np.asarray(gw_dense)
     gb = np.asarray(gp["blocks"])
-    for j in range(len(perm)):
-        r, c = int(np.asarray(s.m)[j]), int(np.asarray(s.k)[j])
+    for j in range(p.n_items):
+        r, c = int(m_idx[j]), int(k_idx[j])
         np.testing.assert_allclose(
-            gb[perm[j]], gw[r * 32:(r + 1) * 32, c * 32:(c + 1) * 32],
+            gb[j], gw[r * 32:(r + 1) * 32, c * 32:(c + 1) * 32],
             rtol=1e-3, atol=1e-3)
+
+
+def test_sparse_linear_jits_as_pytree():
+    """The plan passes through jit as a closed-over pytree without identity
+    hacks; a second trace with substituted values reuses the same layer."""
+    key = jax.random.PRNGKey(6)
+    layer, params = SparseLinear.create(key, 64, 64, block=32, density=0.6)
+    x = jax.random.normal(jax.random.PRNGKey(7), (4, 64))
+
+    @jax.jit
+    def f(p, x_):
+        return layer.apply(p, x_)
+
+    y = f(params, x)
+    np.testing.assert_allclose(np.asarray(y),
+                               np.asarray(x) @ _dense_of(layer, params).T,
+                               rtol=1e-4, atol=1e-4)
+    # new values, same schedule: no retrace needed, numerics follow values
+    params2 = {"blocks": params["blocks"] * 2.0}
+    y2 = f(params2, x)
+    np.testing.assert_allclose(np.asarray(y2), 2.0 * np.asarray(y),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sparse_linear_rejects_ragged_dims():
+    import pytest
+    from repro.models.layers import sparse_dense_init
+    with pytest.raises(ValueError, match="multiples of block"):
+        SparseLinear.create(jax.random.PRNGKey(0), 100, 128, block=32)
+    with pytest.raises(ValueError, match="multiples of block"):
+        sparse_dense_init(jax.random.PRNGKey(0), 64, 100, block=32)
 
 
 def test_sparse_mlp_forward_finite_and_trains():
