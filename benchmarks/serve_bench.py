@@ -1,0 +1,125 @@
+"""Serving throughput benchmark: prefill + steady-state decode tok/s
+through the continuous-batching engine.
+
+Emits ``BENCH_serve.json`` (CI smoke target — the perf trajectory of the
+serving substrate is tracked from this file):
+
+    PYTHONPATH=src python benchmarks/serve_bench.py --smoke
+    PYTHONPATH=src python benchmarks/serve_bench.py --arch granite-3-8b \\
+        --slots 8 --requests 32 --max-new 32
+
+Prefill tok/s counts prompt tokens pushed through the chunked bucketed
+prefill; decode tok/s counts generated tokens over the batched decode
+steps (both exclude compile time: a warmup request covers every compiled
+shape first, and the report asserts the measured phase didn't retrace).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import numpy as np
+
+
+def run(arch: str, *, slots: int, max_len: int, requests: int, max_new: int,
+        prompt_lo: int, prompt_hi: int, backend=None, seed: int = 0) -> dict:
+    from repro.configs import get_config, reduced_config
+    from repro.models import build_model
+    from repro.runtime import Engine, Request
+
+    cfg = reduced_config(get_config(arch))
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    eng = Engine(model, params, slots=slots, max_len=max_len, backend=backend)
+
+    rng = np.random.default_rng(seed)
+
+    def mk(n):
+        return [Request(prompt=rng.integers(0, cfg.vocab,
+                                            int(rng.integers(prompt_lo,
+                                                             prompt_hi)),
+                                            dtype=np.int32),
+                        max_new_tokens=max_new)
+                for _ in range(n)]
+
+    # warmup: compile every steady-state shape — each prefill bucket in
+    # both its fresh (first chunk) and continuation role, plus the decode
+    # shape.  A 2·bucket prompt covers both roles of one bucket.
+    cap = max(1, max_len - 2)
+    eng.generate([Request(prompt=rng.integers(0, cfg.vocab,
+                                              min(2 * b, cap),
+                                              dtype=np.int32),
+                          max_new_tokens=2)
+                  for b in eng.prefill_buckets])
+    shapes_warm = dict(eng.compiled_shapes)
+
+    reqs = mk(requests)
+    prompt_tokens = int(sum(r.prompt.size for r in reqs))
+
+    # phase 1 — prefill: admit up to `slots` requests, timed
+    for r in reqs:
+        eng.submit(r)
+    t0 = time.perf_counter()
+    admitted = eng.admit_pending()
+    jax.block_until_ready(jax.tree.leaves(eng.cache)[0])
+    prefill_s = time.perf_counter() - t0
+    prefill_done = int(sum(r.prompt.size for r in reqs[:admitted]))
+
+    # phase 2 — decode to drain (includes the remaining admissions, as
+    # continuous batching interleaves them; decode tok/s = generated/total)
+    t1 = time.perf_counter()
+    eng.run()
+    decode_s = time.perf_counter() - t1
+    gen_tokens = int(sum(r.out_tokens.size for r in reqs))
+
+    return {
+        "arch": arch,
+        "slots": slots,
+        "max_len": max_len,
+        "requests": requests,
+        "max_new_tokens": max_new,
+        "prompt_tokens": prompt_tokens,
+        "generated_tokens": gen_tokens,
+        "prefill_tok_s": prefill_done / max(prefill_s, 1e-9),
+        "decode_tok_s": gen_tokens / max(decode_s, 1e-9),
+        "prefill_buckets": list(eng.prefill_buckets),
+        "compiled_shapes": eng.compiled_shapes,
+        "retraced_after_warmup": eng.compiled_shapes != shapes_warm,
+        "backend": eng.backend,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-8b")
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--prompt-lo", type=int, default=4)
+    ap.add_argument("--prompt-hi", type=int, default=96)
+    ap.add_argument("--backend", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny CI configuration (fast, still end-to-end)")
+    ap.add_argument("--out", default="BENCH_serve.json")
+    args = ap.parse_args()
+
+    if args.smoke:
+        args.slots, args.max_len = 2, 64
+        args.requests, args.max_new = 4, 4
+        args.prompt_lo, args.prompt_hi = 4, 32
+
+    result = run(args.arch, slots=args.slots, max_len=args.max_len,
+                 requests=args.requests, max_new=args.max_new,
+                 prompt_lo=args.prompt_lo, prompt_hi=args.prompt_hi,
+                 backend=args.backend)
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps(result, indent=2))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,6 @@
-"""Batched serving example: requests through prefill + lockstep decode.
+"""Continuous-batching serving example: mixed-length requests stream
+through per-slot prefill and batched per-position decode — a finished
+request frees its slot immediately and the next queued request takes it.
 
     PYTHONPATH=src python examples/serve_batched.py --arch granite-3-8b
 """
@@ -10,7 +12,7 @@ import numpy as np
 
 from repro.configs import REGISTRY, get_config, reduced_config
 from repro.models import build_model
-from repro.runtime import Request, Server
+from repro.runtime import Engine, Request
 
 
 def main() -> None:
@@ -26,22 +28,26 @@ def main() -> None:
     cfg = reduced_config(get_config(args.arch))
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    server = Server(model, params, batch_slots=3, max_len=128,
+    engine = Engine(model, params, slots=3, max_len=128,
                     backend=args.backend)
     rng = np.random.default_rng(1)
+    # mixed lengths AND mixed budgets: the engine retires each request at
+    # its own limit instead of decoding everyone to the group max
     reqs = [Request(prompt=rng.integers(0, cfg.vocab,
                                         int(rng.integers(4, 24)),
                                         dtype=np.int32),
-                    max_new_tokens=args.max_new)
+                    max_new_tokens=int(rng.integers(4, args.max_new + 1)))
             for _ in range(args.requests)]
     t0 = time.time()
-    server.generate(reqs)
+    engine.generate(reqs)
     dt = time.time() - t0
-    tok = sum(r.max_new_tokens for r in reqs)
+    tok = sum(r.out_tokens.size for r in reqs)
     print(f"{args.arch} (reduced): {len(reqs)} requests, {tok} tokens, "
-          f"{dt:.2f}s → {tok/dt:.1f} tok/s")
+          f"{dt:.2f}s → {tok/dt:.1f} tok/s; "
+          f"compiled shapes {engine.compiled_shapes}")
     for i, r in enumerate(reqs):
-        print(f"  req{i}: prompt[{len(r.prompt)}] → {r.out_tokens.tolist()}")
+        print(f"  req{i}: prompt[{len(r.prompt)}] +{r.max_new_tokens} "
+              f"→ {r.out_tokens.tolist()}")
 
 
 if __name__ == "__main__":

@@ -29,5 +29,18 @@ python -c "import repro.api, repro.kernels"
 python -c "import repro.kernels, repro.api"
 echo "import lint OK"
 
+echo "== serve bench smoke =="
+# end-to-end continuous-batching engine + throughput tracking from this PR
+# on: BENCH_serve.json carries prefill/decode tok/s for the perf trajectory.
+python benchmarks/serve_bench.py --smoke --out BENCH_serve.json
+python - <<'EOF'
+import json
+d = json.load(open("BENCH_serve.json"))
+assert d["prefill_tok_s"] > 0 and d["decode_tok_s"] > 0, d
+assert not d["retraced_after_warmup"], d["compiled_shapes"]
+print(f"serve bench OK: prefill {d['prefill_tok_s']:.1f} tok/s, "
+      f"decode {d['decode_tok_s']:.1f} tok/s")
+EOF
+
 echo "== tier-1 tests =="
 python -m pytest -x -q

@@ -416,10 +416,15 @@ def spgemm_schedule_traffic(sched: SpgemmSchedule, bm: int, bk: int, bn: int,
 def shard_schedule(sizes: np.ndarray, n_shards: int, policy: str = "segment"):
     """Partition per-item work across devices/lanes.
 
-    ``segment`` uses folding's LPT balancing; static policies use round-robin.
+    Dispatches on the policy registry's ``supports_fold`` attribute:
+    fold-capable (dynamic) policies use folding's LPT balancing, static
+    orders use round-robin — so a custom-registered dynamic policy gets
+    LPT too, instead of silently falling back to round-robin as the old
+    ``policy == "segment"`` string compare did.  Unknown names raise
+    ``ValueError`` (listing the registry) rather than degrading.
     Returns (assignment, imbalance stats) — see :mod:`repro.core.folding`.
     """
     from .folding import round_robin_bins
-    if policy == "segment":
+    if get_policy(policy).supports_fold:
         return balance_bins(sizes, n_shards)
     return round_robin_bins(sizes, n_shards)

@@ -1,4 +1,4 @@
-"""Batched serving driver.
+"""Continuous-batching serving driver.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
         --reduced --requests 8 --max-new 16
@@ -13,7 +13,7 @@ import numpy as np
 
 from repro.configs import REGISTRY, get_config, reduced_config
 from repro.models import build_model
-from repro.runtime import Request, Server
+from repro.runtime import Engine, Request
 
 
 def main() -> None:
@@ -24,6 +24,8 @@ def main() -> None:
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--eos", type=int, default=None,
+                    help="retire a request early when it emits this token")
     args = ap.parse_args()
 
     cfg = get_config(args.arch)
@@ -31,19 +33,19 @@ def main() -> None:
         cfg = reduced_config(cfg)
     model = build_model(cfg)
     params = model.init(jax.random.PRNGKey(0))
-    server = Server(model, params, batch_slots=args.slots,
-                    max_len=args.max_len)
+    engine = Engine(model, params, slots=args.slots, max_len=args.max_len)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab, rng.integers(4, 32),
                                         dtype=np.int32).astype(np.int32),
-                    max_new_tokens=args.max_new)
+                    max_new_tokens=args.max_new, eos_token=args.eos)
             for _ in range(args.requests)]
     t0 = time.time()
-    server.generate(reqs)
+    engine.generate(reqs)
     dt = time.time() - t0
-    total = sum(r.max_new_tokens for r in reqs)
+    total = sum(r.out_tokens.size for r in reqs)
     print(f"{len(reqs)} requests, {total} tokens in {dt:.2f}s "
-          f"({total/dt:.1f} tok/s)")
+          f"({total/dt:.1f} tok/s) — compiled shapes: "
+          f"{engine.compiled_shapes}")
     for i, r in enumerate(reqs[:4]):
         print(f"req{i}: prompt_len={len(r.prompt)} out={r.out_tokens[:8]}...")
 

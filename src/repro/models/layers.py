@@ -116,12 +116,14 @@ def chunked_attention(q, k, v, *, causal=True, window=None, q_offset=0,
 
     Online-softmax over KV chunks: peak memory O(Tq·chunk) per head instead
     of O(Tq·Tk).  ``q_offset`` is the absolute position of q[0]; ``kv_len``
-    masks padded keys.
+    masks padded keys.  Both accept a shared scalar or a per-row ``(B,)``
+    vector (continuous batching: every slot at its own position).
     """
     b, tq, h, d = q.shape
     tk, hkv = k.shape[1], k.shape[2]
     rep = h // hkv
     kv_len = tk if kv_len is None else kv_len
+    kv_len = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
     chunk = min(chunk, tk)
     pad = (-tk) % chunk
     if pad:
@@ -130,7 +132,8 @@ def chunked_attention(q, k, v, *, causal=True, window=None, q_offset=0,
     n_chunks = (tk + pad) // chunk
     scale = 1.0 / np.sqrt(d)
     qf = q.astype(jnp.float32) * scale
-    q_pos = q_offset + jnp.arange(tq)
+    q_off = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
+    q_pos = q_off[:, None] + jnp.arange(tq)[None, :]          # (B, Tq)
 
     # reshape kv to (n_chunks, B, chunk, Hkv, D) for scan
     ks = k.reshape(b, n_chunks, chunk, hkv, d).transpose(1, 0, 2, 3, 4)
@@ -144,12 +147,12 @@ def chunked_attention(q, k, v, *, causal=True, window=None, q_offset=0,
             v_c = jnp.repeat(v_c, rep, axis=2)
         s = jnp.einsum("bqhd,bkhd->bhqk", qf, k_c.astype(jnp.float32))
         k_pos = ci * chunk + jnp.arange(chunk)
-        mask = (k_pos[None, :] < kv_len)
+        mask = (k_pos[None, None, :] < kv_len[:, None, None])  # (B, 1, chunk)
         if causal:
-            mask = mask & (k_pos[None, :] <= q_pos[:, None])
+            mask = mask & (k_pos[None, None, :] <= q_pos[..., None])
         if window is not None:
-            mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
-        s = jnp.where(mask[None, None], s, -1e30)
+            mask = mask & (k_pos[None, None, :] > q_pos[..., None] - window)
+        s = jnp.where(mask[:, None], s, -1e30)
         m_new = jnp.maximum(m_prev, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
         alpha = jnp.exp(m_prev - m_new)
@@ -183,6 +186,21 @@ def attention_init(key, d_model, n_heads, n_kv, head_dim, *, qkv_bias=False,
     }
 
 
+def _decode_mask(b, tq, tk, *, q_offset, kv_len, causal, window):
+    """(B, Tq, Tk) validity mask; ``q_offset``/``kv_len`` may be shared
+    scalars or per-row ``(B,)`` vectors (per-slot positions)."""
+    q_off = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (b,))
+    kvl = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+    q_pos = q_off[:, None] + jnp.arange(tq)[None, :]          # (B, Tq)
+    k_pos = jnp.arange(tk)
+    mask = k_pos[None, None, :] < kvl[:, None, None]
+    if causal:
+        mask = mask & (k_pos[None, None, :] <= q_pos[..., None])
+    if window is not None:
+        mask = mask & (k_pos[None, None, :] > q_pos[..., None] - window)
+    return mask
+
+
 def _direct_attention(q, k, v, *, q_offset, kv_len, causal, window):
     """Unchunked masked attention (decode path, Tq ≤ 8).
 
@@ -200,14 +218,9 @@ def _direct_attention(q, k, v, *, q_offset, kv_len, causal, window):
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(k.dtype), k,
                    preferred_element_type=jnp.float32) / np.sqrt(d)
     s = act_constrain(s, "scores_t")   # keep KV timeline sequence-sharded
-    q_pos = q_offset + jnp.arange(tq)
-    k_pos = jnp.arange(tk)
-    mask = k_pos[None, :] < kv_len
-    if causal:
-        mask = mask & (k_pos[None, :] <= q_pos[:, None])
-    if window is not None:
-        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
-    s = jnp.where(mask[None, None], s, -1e30)
+    mask = _decode_mask(b, tq, tk, q_offset=q_offset, kv_len=kv_len,
+                        causal=causal, window=window)
+    s = jnp.where(mask[:, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
@@ -235,14 +248,9 @@ def _direct_attention_q8(q, kq, ks, vq, vs, *, q_offset, kv_len, causal,
                    preferred_element_type=jnp.float32) / np.sqrt(d)
     s = s * ks.transpose(0, 2, 1)[:, :, None, :]        # column-wise dequant
     s = act_constrain(s, "scores_t")
-    q_pos = q_offset + jnp.arange(tq)
-    k_pos = jnp.arange(tk)
-    mask = k_pos[None, :] < kv_len
-    if causal:
-        mask = mask & (k_pos[None, :] <= q_pos[:, None])
-    if window is not None:
-        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
-    s = jnp.where(mask[None, None], s, -1e30)
+    mask = _decode_mask(b, tq, tk, q_offset=q_offset, kv_len=kv_len,
+                        causal=causal, window=window)
+    s = jnp.where(mask[:, None], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     p = p * vs.transpose(0, 2, 1)[:, :, None, :]         # fold v scales into p
     out = jnp.einsum("bhqk,bkhd->bqhd", p.astype(jnp.bfloat16),
@@ -252,11 +260,15 @@ def _direct_attention_q8(q, kq, ks, vq, vs, *, q_offset, kv_len, causal,
 
 
 def ring_decode_attention(q, ck, cv, k_pos, pos, window):
-    """Decode (Tq=1) attention over a ring-buffer KV cache.
+    """Attention over a ring-buffer KV cache.
 
-    q: (B,1,H,D); ck/cv: (B,W,Hkv,D); k_pos: (W,) absolute position held by
-    each slot; masks slots outside (pos-window, pos]."""
-    b, _, h, d = q.shape
+    q: (B,Tq,H,D); ck/cv: (B,W,Hkv,D); k_pos: (B,W) absolute position held
+    by each ring slot (may differ per batch row — continuous batching);
+    pos: (B,) absolute position of q[:, 0].  Each query attends only to
+    slots in its own (q_pos-window, q_pos] — causal within a multi-token
+    write, and slots still holding a previous occupant's junk (k_pos ahead
+    of this row's timeline or negative) are masked out."""
+    b, tq, h, d = q.shape
     hkv = ck.shape[2]
     rep = h // hkv
     if rep > 1:
@@ -264,11 +276,26 @@ def ring_decode_attention(q, ck, cv, k_pos, pos, window):
         cv = jnp.repeat(cv, rep, axis=2)
     s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
                    ck.astype(jnp.float32)) / np.sqrt(d)
-    valid = (k_pos <= pos) & (k_pos > pos - window) & (k_pos >= 0)
-    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    q_pos = pos[:, None] + jnp.arange(tq)[None, :]            # (B, Tq)
+    valid = ((k_pos[:, None, :] <= q_pos[..., None])
+             & (k_pos[:, None, :] > q_pos[..., None] - window)
+             & (k_pos[:, None, :] >= 0))                       # (B, Tq, W)
+    s = jnp.where(valid[:, None], s, -1e30)
     p_attn = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bhqk,bkhd->bqhd", p_attn, cv.astype(jnp.float32))
     return out.astype(q.dtype)
+
+
+def kv_cache_write(buf, new, pos):
+    """Write ``new`` (B, t, …) into ``buf`` (B, T, …) at time-axis offset
+    ``pos`` — a shared scalar (lockstep decode: one contiguous block write)
+    or a per-row ``(B,)`` vector (continuous batching: every slot writes at
+    its own position; vmapped dynamic-update, one row-local write each)."""
+    if getattr(pos, "ndim", 0):
+        return jax.vmap(
+            lambda c, n, p: jax.lax.dynamic_update_slice_in_dim(c, n, p, 0)
+        )(buf, new, pos)
+    return jax.lax.dynamic_update_slice_in_dim(buf, new, pos, axis=1)
 
 
 def attention_apply(p, x, *, n_heads, n_kv, head_dim, positions,
@@ -279,9 +306,11 @@ def attention_apply(p, x, *, n_heads, n_kv, head_dim, positions,
 
     ``cache``: optional dict(k, v) of (B, T_max, n_kv, hd) — decode mode:
     writes current kv at ``cache_pos`` and attends over the whole cache.
-    With ``ring=True`` the cache is a window-sized ring buffer (local
-    attention decode: O(window) memory at any context length).
-    Returns (out, new_cache).
+    ``cache_pos`` is a shared scalar or a per-row ``(B,)`` vector — the
+    latter is the continuous-batching path where every slot sits at its own
+    absolute position.  With ``ring=True`` the cache is a window-sized ring
+    buffer (local attention decode: O(window) memory at any context
+    length).  Returns (out, new_cache).
     """
     from repro.sharding import act_constrain
     b, t, _ = x.shape
@@ -300,16 +329,19 @@ def attention_apply(p, x, *, n_heads, n_kv, head_dim, positions,
     new_cache = None
     if cache is not None and ring:
         w = cache["k"].shape[1]
-        slot = jnp.mod(cache_pos, w)
-        ck = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        pos_v = jnp.broadcast_to(jnp.asarray(cache_pos, jnp.int32), (b,))
+        # scatter each token into its ring slot (handles per-row positions
+        # and writes that wrap around the ring, which a block
+        # dynamic_update_slice would clamp at the edge)
+        slot_idx = jnp.mod(pos_v[:, None] + jnp.arange(t)[None, :], w)
+        rows = jnp.arange(b)[:, None]
+        ck = cache["k"].at[rows, slot_idx].set(k.astype(cache["k"].dtype))
+        cv = cache["v"].at[rows, slot_idx].set(v.astype(cache["v"].dtype))
         new_cache = {"k": ck, "v": cv}
+        last = pos_v + (t - 1)
         idx = jnp.arange(w)
-        k_pos = cache_pos - jnp.mod(cache_pos - idx, w)   # position per slot
-        out = ring_decode_attention(q, ck, cv, k_pos, cache_pos,
-                                    window or w)
+        k_pos = last[:, None] - jnp.mod(last[:, None] - idx[None, :], w)
+        out = ring_decode_attention(q, ck, cv, k_pos, pos_v, window or w)
     elif cache is not None and "k_s" in cache:
         # int8-quantized KV cache (beyond-paper, see EXPERIMENTS §Perf):
         # per-position, per-head symmetric scales. Halves the decode
@@ -325,21 +357,20 @@ def attention_apply(p, x, *, n_heads, n_kv, head_dim, positions,
             return q_, scale
         kq, ks_new = quant(k)
         vq, vs_new = quant(v)
-        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, cache_pos, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, cache_pos, axis=1)
-        cks = jax.lax.dynamic_update_slice_in_dim(cache["k_s"], ks_new, cache_pos, axis=1)
-        cvs = jax.lax.dynamic_update_slice_in_dim(cache["v_s"], vs_new, cache_pos, axis=1)
+        ck = kv_cache_write(cache["k"], kq, cache_pos)
+        cv = kv_cache_write(cache["v"], vq, cache_pos)
+        cks = kv_cache_write(cache["k_s"], ks_new, cache_pos)
+        cvs = kv_cache_write(cache["v_s"], vs_new, cache_pos)
         new_cache = {"k": ck, "v": cv, "k_s": cks, "v_s": cvs}
         assert t <= 8, "int8 KV cache path supports decode-sized queries"
         out = _direct_attention_q8(q, ck, cks, cv, cvs,
                                    q_offset=cache_pos, kv_len=cache_pos + t,
                                    causal=causal, window=window)
     elif cache is not None:
-        # decode: insert at cache_pos, attend over full cache
-        ck = jax.lax.dynamic_update_slice_in_dim(
-            cache["k"], k.astype(cache["k"].dtype), cache_pos, axis=1)
-        cv = jax.lax.dynamic_update_slice_in_dim(
-            cache["v"], v.astype(cache["v"].dtype), cache_pos, axis=1)
+        # decode: insert at cache_pos (per-row or shared), attend over the
+        # full cache masked to each row's own valid length
+        ck = kv_cache_write(cache["k"], k.astype(cache["k"].dtype), cache_pos)
+        cv = kv_cache_write(cache["v"], v.astype(cache["v"].dtype), cache_pos)
         new_cache = {"k": ck, "v": cv}
         if t <= 8:
             # single-token decode: direct masked attention — scores are

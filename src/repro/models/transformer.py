@@ -338,18 +338,30 @@ class Transformer:
         return {name: stack(kinds, n) for (name, kinds, n) in self.groups
                 if name != "enc"}
 
-    def decode_step(self, params, cache, token, pos, enc_out=None):
+    def decode_step(self, params, cache, token, pos, enc_out=None, *,
+                    logit_idx=None):
         """token: (B, T) int32 (T=1 decode, T>1 chunked prefill); pos:
-        scalar int32 — absolute position of token[:, 0].
+        absolute position of token[:, 0] — a shared scalar int32 (lockstep
+        decode) or a per-row (B,) int32 vector (continuous batching: every
+        slot sits at its own position).
 
-        Returns (logits (B, vocab) for the last position, new_cache)."""
+        ``logit_idx``: optional per-row (B,) int32 index into the T axis —
+        the logits are gathered at each row's *last valid* token instead of
+        ``T-1`` (mixed-length chunked prefill: a row whose prompt ends
+        mid-chunk must not sample its first token from padding).
+
+        Returns (logits (B, vocab), new_cache)."""
         cfg = self.cfg
         dt = _dtype(cfg)
         x = layers.embedding_apply(params["embed"], token).astype(dt)
         x = act_constrain(x, "hidden")
         b, t, _ = x.shape
-        positions = (pos + jnp.arange(t))[None, :].astype(jnp.int32)
-        positions = jnp.broadcast_to(positions, (b, t))
+        pos = jnp.asarray(pos, jnp.int32)
+        if pos.ndim == 0:
+            positions = jnp.broadcast_to((pos + jnp.arange(t))[None, :], (b, t))
+        else:
+            positions = pos[:, None] + jnp.arange(t)[None, :]
+        positions = positions.astype(jnp.int32)
         new_cache = {}
         for (name, kinds, n) in self.groups:
             if name == "enc":
@@ -359,6 +371,13 @@ class Transformer:
                 caches=cache[name], cache_pos=pos, collect_cache=True)
             new_cache[name] = nc
         x = layers.rmsnorm_apply(params["final_norm"], x, cfg.norm_eps)
+        # gather each row's output position *before* the lm_head so the
+        # (B, T, vocab) prefill logits never materialize
+        if logit_idx is None:
+            x = x[:, -1:]
+        else:
+            idx = jnp.broadcast_to(jnp.asarray(logit_idx, jnp.int32), (b,))
+            x = jnp.take_along_axis(x, idx[:, None, None], axis=1)
         head = params.get("lm_head", params["embed"])
         logits = layers.lm_head_apply(head, x)
-        return logits[:, -1], new_cache
+        return logits[:, 0], new_cache

@@ -1,4 +1,5 @@
 from .train_loop import Trainer, TrainerConfig, make_train_step
-from .serve import Request, Server
+from .serve import Engine, Request, Server
 
-__all__ = ["Trainer", "TrainerConfig", "make_train_step", "Request", "Server"]
+__all__ = ["Trainer", "TrainerConfig", "make_train_step", "Engine",
+           "Request", "Server"]

@@ -66,34 +66,55 @@ def compressed_psum(grads, axis_name: str, error_fb, method: str = "int8",
     return mean, new_ef
 
 
+def init_error_fb(params_like, n_dev: int):
+    """Per-device error-feedback state: one residual copy per dp rank.
+
+    The residual is *device-local* state (each rank quantizes its own
+    shard's gradient), so it is carried with a leading dp axis of size
+    ``n_dev`` and sharded over the dp mesh axis — returning it through a
+    replicated ``P()`` out_spec under ``check_rep=False`` silently keeps
+    only one device's residual and the EF correction never converges.
+    """
+    return jax.tree.map(
+        lambda p: jnp.zeros((n_dev,) + jnp.shape(p), jnp.float32),
+        params_like)
+
+
 def make_compressed_dp_step(loss_fn, opt, mesh, dp_axis: str = "data",
                             method: str = "int8"):
     """A data-parallel train step whose gradient all-reduce is compressed.
 
     State: (params, opt_state, error_fb). Batch is sharded on ``dp_axis``;
-    params replicated (pure DP — the demonstration configuration).
+    params replicated (pure DP — the demonstration configuration);
+    ``error_fb`` comes from :func:`init_error_fb` — per-device residuals
+    with a leading dp axis, carried sharded over ``dp_axis`` so every
+    rank's residual survives the round trip.
     """
     from jax.sharding import PartitionSpec as P
     from jax.experimental.shard_map import shard_map
 
     def spmd(params, opt_state, error_fb, batch):
+        ef_local = jax.tree.map(lambda e: e[0], error_fb)   # drop dp axis
         loss, grads = jax.value_and_grad(loss_fn)(params, batch)
-        grads, new_ef = compressed_psum(grads, dp_axis, error_fb, method)
+        grads, new_ef = compressed_psum(grads, dp_axis, ef_local, method)
         loss = jax.lax.pmean(loss, dp_axis)
         new_params, new_opt, om = opt.update(grads, opt_state, params)
+        new_ef = jax.tree.map(lambda e: e[None], new_ef)    # restore dp axis
         return new_params, new_opt, new_ef, loss
 
-    def batch_spec(leaf):
+    def leading_dp_spec(leaf):
+        # batch and error_fb both carry dp as their leading axis
         return P(dp_axis, *([None] * (leaf.ndim - 1)))
 
     def step(state, batch):
         params, opt_state, error_fb = state
-        specs_b = jax.tree.map(batch_spec, batch)
+        specs_b = jax.tree.map(leading_dp_spec, batch)
+        specs_e = jax.tree.map(leading_dp_spec, error_fb)
         # P() prefixes cover whole subtrees (params pytree, AdamWState)
         fn = shard_map(
             spmd, mesh=mesh,
-            in_specs=(P(), P(), P(), specs_b),
-            out_specs=(P(), P(), P(), P()),
+            in_specs=(P(), P(), specs_e, specs_b),
+            out_specs=(P(), P(), specs_e, P()),
             check_rep=False)
         new_params, new_opt, new_ef, loss = fn(params, opt_state, error_fb,
                                                batch)

@@ -21,7 +21,7 @@ pipeline; the runtime keeps it policy-level (no kernel changes needed).
 """
 from __future__ import annotations
 
-from typing import List, Optional, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
@@ -59,7 +59,19 @@ def restore_onto_mesh(ckpt: CheckpointManager, step: int, state_like,
 
 
 def rescale_accum(global_batch: int, old_dp: int, new_dp: int,
-                  old_accum: int) -> int:
-    """Keep the effective global batch constant after dp shrink."""
-    per_device = global_batch // (old_dp * old_accum)
-    return max(1, global_batch // (new_dp * per_device))
+                  old_accum: int) -> Tuple[int, int]:
+    """Accum steps keeping the effective global batch ≥ the target after a
+    dp change.
+
+    Ceil-divides: the old floor division silently *shrank* the effective
+    batch whenever the new dp degree didn't divide the per-step token
+    count (64 tokens, dp 8→6: floor kept accum=1 → effective 48).  Rounding
+    up can only overshoot, never starve the optimizer of tokens, and the
+    overshoot is surfaced: returns ``(new_accum, effective_batch)`` with
+    ``effective_batch = new_accum * new_dp * per_device_batch`` so the
+    caller can log/compensate (e.g. rescale the LR) instead of discovering
+    a silently different batch in the loss curves.
+    """
+    per_device = max(1, global_batch // (old_dp * old_accum))
+    new_accum = max(1, -(-global_batch // (new_dp * per_device)))
+    return new_accum, new_accum * new_dp * per_device

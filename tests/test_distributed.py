@@ -53,7 +53,7 @@ def test_compressed_dp_allreduce():
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import Mesh
     from repro.optim import AdamW, constant
-    from repro.runtime.compression import make_compressed_dp_step
+    from repro.runtime.compression import init_error_fb, make_compressed_dp_step
 
     from repro.launch.mesh import make_mesh, mesh_context
     mesh = make_mesh((8,), ("data",))
@@ -67,7 +67,9 @@ def test_compressed_dp_allreduce():
 
     opt = AdamW(lr=constant(0.05), weight_decay=0.0)
     params = {"w": jnp.zeros(16)}
-    state = (params, opt.init(params), {"w": jnp.zeros(16)})
+    ef = init_error_fb(params, 8)
+    assert ef["w"].shape == (8, 16)
+    state = (params, opt.init(params), ef)
     step = make_compressed_dp_step(loss_fn, opt, mesh, method="int8")
     rng = np.random.default_rng(1)
     losses = []
@@ -78,9 +80,35 @@ def test_compressed_dp_allreduce():
             state, loss = step(state, (x, y))
             losses.append(float(loss))
     assert losses[-1] < losses[0] * 0.05, (losses[0], losses[-1])
-    print("COMPRESS_OK", losses[0], "->", losses[-1])
+    # the residual is genuinely per-device state: each dp rank quantizes a
+    # different batch shard, so the carried rows must differ — the old
+    # replicated P() out_spec kept one rank's residual for everyone
+    ef = np.asarray(state[2]["w"])
+    assert ef.shape == (8, 16)
+    n_distinct = len({r.tobytes() for r in ef})
+    assert n_distinct > 1, "error-feedback rows collapsed to one device"
+    print("COMPRESS_OK", losses[0], "->", losses[-1], "rows", n_distinct)
     """)
     assert "COMPRESS_OK" in out
+
+
+def test_rescale_accum_never_shrinks_effective_batch():
+    """Ceil-divide regression: dp 8→6 with 64-token global batch used to
+    floor to accum=1 (effective 48); it must round up and report the
+    overshoot."""
+    from repro.runtime.elastic import rescale_accum
+
+    accum, eff = rescale_accum(64, old_dp=8, new_dp=6, old_accum=1)
+    assert accum == 2 and eff == 96          # never below the 64 target
+    # exact division stays exact
+    accum, eff = rescale_accum(64, old_dp=8, new_dp=4, old_accum=1)
+    assert accum == 2 and eff == 64
+    accum, eff = rescale_accum(256, old_dp=8, new_dp=8, old_accum=2)
+    assert accum == 2 and eff == 256
+    # effective batch is always >= the requested global batch
+    for gb, od, nd, oa in ((64, 8, 6, 1), (128, 16, 10, 2), (96, 8, 5, 4)):
+        accum, eff = rescale_accum(gb, od, nd, oa)
+        assert eff >= gb, (gb, od, nd, oa, accum, eff)
 
 
 def test_pipeline_parallel_matches_sequential():

@@ -40,6 +40,37 @@ def test_lpt_beats_round_robin():
     assert lpt["imbalance"] <= rr["imbalance"] + 1e-9
 
 
+def test_shard_schedule_dispatches_on_registry_not_name():
+    """A custom-registered fold-capable policy must get LPT balancing, not
+    the round-robin fallback the old ``policy == "segment"`` string compare
+    handed everything non-built-in; unknown names raise instead of
+    silently degrading."""
+    import pytest
+    from repro.core.policies import register_policy, unregister_policy
+    from repro.core.schedule import shard_schedule
+
+    rng = np.random.default_rng(2)
+    sizes = (rng.pareto(1.5, size=200) * 10 + 1).astype(np.int64)
+    register_policy("custom-dynamic", spmm_order=lambda m, k: np.argsort(m),
+                    spgemm_order=lambda m, n, k, c: np.argsort(c),
+                    supports_fold=True)
+    register_policy("custom-static", spmm_order=lambda m, k: np.argsort(k),
+                    spgemm_order=lambda m, n, k, c: np.argsort(k),
+                    supports_fold=False)
+    try:
+        asn_dyn, _ = shard_schedule(sizes, 16, policy="custom-dynamic")
+        asn_lpt, _ = balance_bins(sizes, 16)
+        np.testing.assert_array_equal(asn_dyn, asn_lpt)
+        asn_sta, _ = shard_schedule(sizes, 16, policy="custom-static")
+        asn_rr, _ = round_robin_bins(sizes, 16)
+        np.testing.assert_array_equal(asn_sta, asn_rr)
+        with pytest.raises(ValueError, match="unknown policy"):
+            shard_schedule(sizes, 16, policy="no-such-policy")
+    finally:
+        unregister_policy("custom-dynamic")
+        unregister_policy("custom-static")
+
+
 # --- schedule finalization (accum_prev / row_mask derivation) ----------------
 
 

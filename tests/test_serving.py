@@ -1,0 +1,231 @@
+"""Serving-engine correctness: the mixed-length oracle (headline bug
+regression), steady-state retrace flatness, admission/retirement dynamics,
+and cache-overflow validation.
+
+The oracle test is the regression for the lockstep server's padding bug:
+left-aligned zero-padded prompts with one shared scalar position meant any
+request shorter than its group's max sampled its first token from padding
+and decoded every later token at a shifted position.  The continuous
+engine must make a batched mixed-length run token-for-token identical to
+generating each request alone.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import REGISTRY, reduced_config
+from repro.models import build_model
+from repro.runtime import Engine, Request, Server
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _setup(arch="granite-3-8b", **over):
+    # f32 so greedy argmax is bitwise batch-size invariant on CPU
+    cfg = dataclasses.replace(reduced_config(REGISTRY[arch]),
+                              dtype="float32", **over)
+    model = build_model(cfg)
+    return cfg, model, model.init(KEY)
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab, l, dtype=np.int32) for l in lens]
+
+
+# ---------------------------------------------------------------------------
+# the headline-bug oracle
+# ---------------------------------------------------------------------------
+
+
+def test_mixed_length_batch_matches_single_request_oracle():
+    """Batched mixed-length generation must equal per-request single-slot
+    generation token-for-token — no request ever reads padding or a wrong
+    position.  slots < requests also exercises retirement + re-admission
+    mid-run."""
+    cfg, model, params = _setup()
+    prompts = _prompts(cfg, (4, 17, 31))
+
+    alone = []
+    for p in prompts:
+        eng = Engine(model, params, slots=1, max_len=64,
+                     prefill_buckets=(16, 8))
+        r = Request(prompt=p.copy(), max_new_tokens=6)
+        eng.generate([r])
+        alone.append(r.out_tokens.tolist())
+
+    eng = Engine(model, params, slots=2, max_len=64, prefill_buckets=(16, 8))
+    reqs = [Request(prompt=p.copy(), max_new_tokens=6) for p in prompts]
+    eng.generate(reqs)
+    batched = [r.out_tokens.tolist() for r in reqs]
+    assert batched == alone
+
+
+def test_mixed_max_new_tokens_no_over_decode():
+    """Each request stops at its *own* max_new_tokens (the lockstep server
+    decoded everyone to the group max), and shorter budgets are prefixes of
+    longer ones from the same prompt."""
+    cfg, model, params = _setup()
+    prompt = _prompts(cfg, (9,))[0]
+    eng = Engine(model, params, slots=2, max_len=64, prefill_buckets=(16, 8))
+    reqs = [Request(prompt=prompt.copy(), max_new_tokens=m) for m in (2, 7)]
+    eng.generate(reqs)
+    a, b = reqs[0].out_tokens.tolist(), reqs[1].out_tokens.tolist()
+    assert len(a) == 2 and len(b) == 7
+    assert b[:2] == a
+
+
+def test_eos_frees_slot_early():
+    cfg, model, params = _setup()
+    prompt = _prompts(cfg, (7,))[0]
+    probe = Engine(model, params, slots=1, max_len=64, prefill_buckets=(8,))
+    r = Request(prompt=prompt.copy(), max_new_tokens=8)
+    probe.generate([r])
+    full = r.out_tokens.tolist()
+    eos = full[2]
+    eng = Engine(model, params, slots=1, max_len=64, prefill_buckets=(8,))
+    r2 = Request(prompt=prompt.copy(), max_new_tokens=8, eos_token=eos)
+    eng.generate([r2])
+    # retired at the first eos occurrence (kept in the output)
+    stop = full.index(eos) + 1
+    assert r2.out_tokens.tolist() == full[:stop]
+    assert eng.completed == 1 and all(s is None for s in eng._slots)
+
+
+# ---------------------------------------------------------------------------
+# steady-state compiled-shape flatness
+# ---------------------------------------------------------------------------
+
+
+def test_no_retrace_across_arrivals_and_retirements():
+    """After a warmup wave covering the bucket shapes, further waves of
+    different lengths/budgets must not trigger any recompilation."""
+    cfg, model, params = _setup()
+    eng = Engine(model, params, slots=2, max_len=64, prefill_buckets=(16,))
+    # warmup: single-chunk fresh + multi-chunk (fresh + continuation)
+    eng.generate([Request(prompt=p, max_new_tokens=3)
+                  for p in _prompts(cfg, (5, 20), seed=1)])
+    warm = dict(eng.compiled_shapes)
+    assert warm["decode"] == 1
+    # new arrivals: different lengths, different budgets, queueing + slot
+    # churn — all served by the warm shapes
+    eng.generate([Request(prompt=p, max_new_tokens=m)
+                  for p, m in zip(_prompts(cfg, (3, 21, 13, 16, 30), seed=2),
+                                  (2, 5, 1, 4, 3))])
+    assert eng.compiled_shapes == warm
+
+
+def test_persistent_cache_reused_across_generations():
+    """The KV cache is allocated once at construction; repeated generate()
+    calls reuse the same buffers (no per-batch re-allocation)."""
+    cfg, model, params = _setup()
+    eng = Engine(model, params, slots=2, max_len=64, prefill_buckets=(16,))
+    shapes0 = jax.tree.map(lambda a: a.shape, eng.cache)
+    p1, p2 = _prompts(cfg, (6, 12), seed=3)
+    eng.generate([Request(prompt=p1, max_new_tokens=2)])
+    eng.generate([Request(prompt=p2, max_new_tokens=2)])
+    assert jax.tree.map(lambda a: a.shape, eng.cache) == shapes0
+
+
+def test_slot_reuse_does_not_leak_previous_request():
+    """A request admitted into a just-freed slot decodes exactly as it
+    would in a fresh engine — admission wipes the previous occupant."""
+    cfg, model, params = _setup()
+    p_a, p_b = _prompts(cfg, (23, 9), seed=4)
+    eng = Engine(model, params, slots=1, max_len=64, prefill_buckets=(16, 8))
+    ra = Request(prompt=p_a.copy(), max_new_tokens=5)
+    rb = Request(prompt=p_b.copy(), max_new_tokens=5)
+    eng.generate([ra, rb])          # rb reuses ra's slot
+    fresh = Engine(model, params, slots=1, max_len=64,
+                   prefill_buckets=(16, 8))
+    rb2 = Request(prompt=p_b.copy(), max_new_tokens=5)
+    fresh.generate([rb2])
+    assert rb.out_tokens.tolist() == rb2.out_tokens.tolist()
+
+
+def test_int8_kv_cache_mixed_lengths():
+    """The factored-scale int8 KV path is decode-sized (t ≤ 8): the engine
+    caps prefill buckets and still matches the single-request oracle."""
+    cfg, model, params = _setup(kv_cache_dtype="int8")
+    prompts = _prompts(cfg, (4, 17), seed=8)
+    alone = []
+    for p in prompts:
+        e1 = Engine(model, params, slots=1, max_len=64)
+        r = Request(prompt=p.copy(), max_new_tokens=4)
+        e1.generate([r])
+        alone.append(r.out_tokens.tolist())
+    eng = Engine(model, params, slots=2, max_len=64)
+    assert max(eng.prefill_buckets) <= 8
+    reqs = [Request(prompt=p.copy(), max_new_tokens=4) for p in prompts]
+    eng.generate(reqs)
+    assert [r.out_tokens.tolist() for r in reqs] == alone
+
+
+def test_recurrent_family_mixed_lengths():
+    """Stateful families (hybrid rec + local ring, rwkv) serve mixed
+    lengths correctly through the token-wise prefill path."""
+    for arch in ("recurrentgemma-9b", "rwkv6-1.6b"):
+        cfg, model, params = _setup(arch)
+        assert Engine(model, params, slots=1, max_len=64).prefill_buckets \
+            == (1,)
+        prompts = _prompts(cfg, (3, 14), seed=5)
+        alone = []
+        for p in prompts:
+            e1 = Engine(model, params, slots=1, max_len=64)
+            r = Request(prompt=p.copy(), max_new_tokens=4)
+            e1.generate([r])
+            alone.append(r.out_tokens.tolist())
+        eng = Engine(model, params, slots=2, max_len=64)
+        reqs = [Request(prompt=p.copy(), max_new_tokens=4) for p in prompts]
+        eng.generate(reqs)
+        assert [r.out_tokens.tolist() for r in reqs] == alone, arch
+
+
+# ---------------------------------------------------------------------------
+# admission validation (cache-overflow regression)
+# ---------------------------------------------------------------------------
+
+
+def test_overlong_prompt_rejected_not_clamped():
+    """Prompt (or prompt + budget) exceeding max_len must raise — the old
+    server let dynamic_update_slice clamp the write index, silently
+    corrupting the cache tail."""
+    cfg, model, params = _setup()
+    eng = Engine(model, params, slots=1, max_len=32, prefill_buckets=(16, 8))
+    rng = np.random.default_rng(6)
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(prompt=rng.integers(0, cfg.vocab, 40,
+                                               dtype=np.int32)))
+    with pytest.raises(ValueError, match="max_len"):
+        eng.submit(Request(prompt=rng.integers(0, cfg.vocab, 30,
+                                               dtype=np.int32),
+                           max_new_tokens=8))
+    with pytest.raises(ValueError, match="empty"):
+        eng.submit(Request(prompt=np.zeros((0,), np.int32)))
+    # a fitting request on the same engine still serves fine
+    ok = Request(prompt=rng.integers(0, cfg.vocab, 24, dtype=np.int32),
+                 max_new_tokens=8)
+    eng.generate([ok])
+    assert ok.out_tokens.shape == (8,)
+
+
+def test_server_backcompat_surface():
+    """The old Server constructor keywords and generate() contract hold."""
+    cfg, model, params = _setup()
+    srv = Server(model, params, batch_slots=3, max_len=64,
+                 prefill_buckets=(16, 8))
+    reqs = [Request(prompt=p, max_new_tokens=4)
+            for p in _prompts(cfg, (4, 9, 13, 6), seed=7)]
+    out = srv.generate(reqs)
+    assert out is reqs
+    assert all(r.out_tokens.shape == (4,) for r in reqs)
+
+
+def test_enc_dec_rejected():
+    cfg = reduced_config(REGISTRY["whisper-tiny"])
+    model = build_model(cfg)
+    params = model.init(KEY)
+    with pytest.raises(NotImplementedError):
+        Engine(model, params)
