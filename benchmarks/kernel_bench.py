@@ -1,43 +1,150 @@
 """Kernel-level benchmarks: Segment-schedule traffic savings (the TPU reuse
-metric) + interpret-mode wall time vs the jnp oracle.
+metric) + lane-parallel interpret wall time vs the dense oracle.
+
+Emits ``BENCH_kernels.json`` (CI smoke target — the kernel perf trajectory
+is tracked from this file, alongside ``BENCH_serve.json`` for serving):
+
+    PYTHONPATH=src python -m benchmarks.kernel_bench --out BENCH_kernels.json
 
 Policies are enumerated from the registry (``repro.api.available_policies``)
 so newly registered dataflows show up in the sweep without editing this file.
+The lane sweep runs the 512×512 SpMM case at 1/2/4 lanes and reports
+interpret-mode wall time (median of ``--repeats`` interleaved warm calls),
+max error vs the dense oracle, modeled HBM traffic, and the LPT load
+imbalance.
 """
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
 import numpy as np
 import jax.numpy as jnp
 
 from repro import api
 from repro.core.formats import BSR
 
-from .common import Csv, timed
+from .common import Csv
+
+LANE_CASE = dict(shape=(512, 512), block=(64, 64), blocks_per_row=2,
+                 n_cols=256, bn=128)
+LANES = (1, 2, 4)
 
 
-def run(csv: Csv) -> dict:
+def traffic_sweep() -> dict:
+    """Schedule-traffic ratios of every registered policy vs ``segment``."""
     rng = np.random.default_rng(0)
-    out = {}
     policies = api.available_policies()
+    out = {}
     for (m, k, blk, dens) in [(1024, 1024, 128, 0.25), (2048, 1024, 128, 0.1),
                               (512, 2048, 64, 0.3)]:
         a = BSR.random(rng, (m, k), (blk, blk), dens)
         tr = {p: api.plan_matmul(a, n_cols_hint=1024, policy=p).traffic
               for p in policies}
         base = {p: t["total"] for p, t in tr.items() if p != "segment"}
-        ratios = {p: base[p] / tr["segment"]["total"] for p in base}
-        out[(m, k, blk, dens)] = ratios
-        csv.add(f"kernel/spmm_traffic_M{m}K{k}b{blk}d{dens}", 0.0,
-                ";".join(f"segment_traffic_saving_vs_{p}={r:.3f}"
-                         for p, r in sorted(ratios.items())))
-    # interpret-mode numeric check timing (CPU; TPU wall-time N/A here)
-    a = BSR.random(rng, (512, 512), (64, 64), 0.25)
-    bd = jnp.asarray(rng.standard_normal((512, 256)).astype(np.float32))
-    plan = api.plan_matmul(a, bd.shape)
-    _, us1 = timed(lambda: np.asarray(plan(bd, bn=128)))
-    _, us2 = timed(lambda: np.asarray(plan(bd, bn=128)))  # warm
-    want = a.to_dense() @ np.asarray(bd)
-    err = float(np.abs(np.asarray(plan(bd, bn=128)) - want).max())
-    csv.add("kernel/spmm_interpret_512", us2, f"max_err={err:.2e}")
-    # reference-backend parity on the same plan (backend dispatch smoke)
-    err_ref = float(np.abs(np.asarray(plan(bd, backend="reference")) - want).max())
-    csv.add("kernel/spmm_reference_512", 0.0, f"max_err={err_ref:.2e}")
+        key = f"M{m}_K{k}_b{blk}_d{dens}"
+        out[key] = {f"segment_traffic_saving_vs_{p}": base[p] / tr["segment"]["total"]
+                    for p in base}
     return out
+
+
+def _balanced_bsr(rng) -> BSR:
+    """Uniform blocks-per-row 512×512 pattern (0.25 block density).
+
+    Load-balanced sparsity is the lane feature's target configuration:
+    chains pack into lanes with zero padding, so the interpret-mode wall
+    time (which emulates the grid *sequentially* — lanes can only tie, the
+    concurrency win needs real hardware) compares equal step counts.
+    """
+    m, k = LANE_CASE["shape"]
+    bm, bk = LANE_CASE["block"]
+    gm, gk = m // bm, k // bk
+    brow, bcol = [], []
+    for r in range(gm):
+        cols = rng.choice(gk, size=LANE_CASE["blocks_per_row"], replace=False)
+        for c in sorted(cols.tolist()):
+            brow.append(r)
+            bcol.append(c)
+    return BSR(shape=(m, k), block_shape=(bm, bk),
+               brow=np.asarray(brow, np.int32),
+               bcol=np.asarray(bcol, np.int32),
+               blocks=rng.standard_normal(
+                   (len(brow), bm, bk)).astype(np.float32))
+
+
+def lane_sweep(repeats: int = 12) -> dict:
+    """Interpret wall time + dense-oracle parity for 1/2/4 lanes.
+
+    Timing is interleaved round-robin across lane counts (kills drift bias)
+    and reported as min/median of ``repeats`` warm calls.
+    """
+    rng = np.random.default_rng(1)
+    a = _balanced_bsr(rng)
+    bd = jnp.asarray(rng.standard_normal(
+        (LANE_CASE["shape"][1], LANE_CASE["n_cols"])).astype(np.float32))
+    want = a.to_dense() @ np.asarray(bd)
+
+    runs = {}
+    for lanes in LANES:
+        plan = api.plan_matmul(a, bd.shape, n_lanes=lanes)
+        fn = jax.jit(lambda p, x: api.execute_plan(
+            p, x, bn=LANE_CASE["bn"], backend="interpret"))
+        got = np.asarray(fn(plan, bd))                 # compile + warm
+        runs[lanes] = (plan, fn, float(np.abs(got - want).max()))
+    times = {lanes: [] for lanes in LANES}
+    for _ in range(repeats):
+        for lanes, (plan, fn, _err) in runs.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(plan, bd))
+            times[lanes].append((time.perf_counter() - t0) * 1e6)
+
+    out = {}
+    for lanes, (plan, _fn, err) in runs.items():
+        ts = sorted(times[lanes])
+        tr = plan.traffic
+        out[str(lanes)] = {
+            "effective_lanes": plan.n_lanes,
+            "interpret_us": ts[len(ts) // 2],          # median
+            "interpret_us_min": ts[0],
+            "max_err": err,
+            "traffic_total_bytes": tr["total"],
+            "b_fetches": tr["b_fetches"],
+            "lane_imbalance": tr.get("imbalance", 1.0),
+            "padded_items": tr.get("padded_items", 0),
+        }
+    return out
+
+
+def run(csv: Csv) -> dict:
+    """CSV entry point for ``benchmarks.run`` (the figure-suite driver)."""
+    ratios = traffic_sweep()
+    for key, r in ratios.items():
+        csv.add(f"kernel/spmm_traffic_{key}", 0.0,
+                ";".join(f"{name}={v:.3f}" for name, v in sorted(r.items())))
+    lanes = lane_sweep()
+    for n, row in lanes.items():
+        csv.add(f"kernel/spmm_interpret_512_lanes{n}", row["interpret_us"],
+                f"max_err={row['max_err']:.2e};"
+                f"imbalance={row['lane_imbalance']:.3f}")
+    return {"traffic": ratios, "lanes": lanes}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=12)
+    ap.add_argument("--out", default="BENCH_kernels.json")
+    args = ap.parse_args()
+
+    result = {"traffic": traffic_sweep(), "lanes": lane_sweep(args.repeats),
+              "lane_case": {k: str(v) for k, v in LANE_CASE.items()},
+              "plan_cache": api.plan_cache_stats()}
+    with open(args.out, "w") as f:
+        json.dump(result, f, indent=2)
+    print(json.dumps(result["lanes"], indent=2))
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

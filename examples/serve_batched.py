@@ -36,7 +36,8 @@ def main() -> None:
     reqs = [Request(prompt=rng.integers(0, cfg.vocab,
                                         int(rng.integers(4, 24)),
                                         dtype=np.int32),
-                    max_new_tokens=int(rng.integers(4, args.max_new + 1)))
+                    max_new_tokens=int(rng.integers(
+                        min(4, args.max_new), args.max_new + 1)))
             for _ in range(args.requests)]
     t0 = time.time()
     engine.generate(reqs)

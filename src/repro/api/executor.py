@@ -5,10 +5,15 @@
 ``apply_plan`` is the trainable entry point: a ``custom_vjp`` lifted out of
 the old ``models/sparse_ffn.py`` so serving and training share one executor —
 
-* forward:  ``y = W @ x``   (Segment SpMM under the plan's schedule);
+* forward:  ``y = W @ x``   (lane-parallel Segment SpMM under the plan's
+  schedule; block values read in original BSR storage order via the
+  ``slot_idx`` prefetch array);
 * ``dx = Wᵀ @ dy``          — another Segment SpMM under the plan's nested
-  transposed schedule (``plan.grad_plan``, built once, static);
-* ``dW[i] = dy[mᵢ] @ x[kᵢ]ᵀ`` — block-sampled SDDMM, pure jnp.
+  transposed schedule (``plan.grad_plan``, built once, static), executed in
+  the kernel's ``transpose_lhs`` mode against the *forward* weight array —
+  no transposed or gathered copy of W is ever materialized;
+* ``dW[s] = dy[rowₛ] @ x[colₛ]ᵀ`` — block-sampled SDDMM, pure jnp, emitted
+  directly in storage order via ``a_brow``/``a_bcol``.
 
 The N-tile width is normalized in one place (:func:`pick_bn`): the executor
 either shrinks ``bn`` to the largest divisor of N or pads N up to a tile
@@ -52,29 +57,46 @@ def pick_bn(n: int, bn: int) -> Tuple[int, int]:
 def _mask_dead_rows(plan: SegmentPlan, out: jax.Array) -> jax.Array:
     # block rows with no nonzero A blocks are never visited by the grid —
     # their output is undefined (may be NaN); zero them via where.
-    bm = plan.block_shape[0]
-    live = jnp.repeat(plan.row_mask > 0, bm)[:, None]
+    row_blk = plan.block_shape[0]
+    live = jnp.repeat(plan.row_mask > 0, row_blk)[:, None]
     return jnp.where(live, out, jnp.zeros((), out.dtype))
 
 
 def _run_spmm(plan: SegmentPlan, x: jax.Array, *, backend: str,
               blocks: Optional[jax.Array] = None, bn: int = 512,
               out_dtype=jnp.float32) -> jax.Array:
-    """Execute an spmm plan (optionally with substituted block values)."""
+    """Execute an spmm plan (optionally with substituted block values).
+
+    ``blocks`` are always the *stored* tiles (original BSR order); a
+    ``transpose_lhs`` plan (the nested backward schedule) contracts along
+    their row axis instead of copying a transposed array.
+    """
     blocks = plan.lhs_blocks if blocks is None else blocks
     gm, gk = plan.grid
     bm, bk = blocks.shape[1], blocks.shape[2]
-    if x.ndim != 2 or x.shape[0] != gk * bk:
-        raise ValueError(f"rhs must be (K={gk * bk}, N) dense, got {x.shape}")
+    contract_blk = bm if plan.transpose_lhs else bk
+    if x.ndim != 2 or x.shape[0] != gk * contract_blk:
+        raise ValueError(f"rhs must be (K={gk * contract_blk}, N) dense, "
+                         f"got {x.shape}")
     if backend == "reference":
-        out = ref.spmm_ref(blocks, plan.m_idx, plan.k_idx, gm, gk, x)
+        if plan.transpose_lhs:
+            # a_brow/a_bcol describe the *forward* storage; its grid is the
+            # plan's grid reversed.
+            out = ref.spmm_ref(blocks, plan.a_brow, plan.a_bcol,
+                               plan.grid[1], plan.grid[0], x,
+                               transpose_lhs=True)
+        else:
+            out = ref.spmm_ref(blocks, plan.a_brow, plan.a_bcol, gm, gk, x)
         return out.astype(out_dtype)
     n = x.shape[1]
     bn_eff, pad = pick_bn(n, bn)
     xp = jnp.pad(x, ((0, 0), (0, pad))) if pad else x
     out = segment_spmm(
-        blocks, plan.m_idx, plan.k_idx, plan.seg_start, plan.seg_write,
-        plan.accum_prev, xp, grid_m=gm, bn=bn_eff,
+        blocks, plan.slot_idx, plan.m_idx, plan.k_idx, plan.seg_start,
+        plan.seg_write, plan.accum_prev, plan.valid, xp, grid_m=gm,
+        n_lanes=plan.n_lanes, bn=bn_eff, unroll=plan.unroll,
+        transpose_lhs=plan.transpose_lhs,
+        masked=(plan.n_lanes > 1 or plan.unroll > 1),
         interpret=backend_interpret_flag(backend), out_dtype=out_dtype)
     if pad:
         out = out[:, :n]
@@ -91,8 +113,10 @@ def _run_spgemm(plan: SegmentPlan, *, backend: str,
         return out.astype(out_dtype)
     return segment_spgemm(
         plan.lhs_blocks, plan.rhs_blocks, plan.a_idx, plan.b_idx, plan.c_idx,
-        plan.seg_start, plan.seg_write, plan.accum_prev,
-        n_c_blocks=plan.n_out_blocks,
+        plan.seg_start, plan.seg_write, plan.accum_prev, plan.valid,
+        n_c_blocks=plan.n_out_blocks, n_lanes=plan.n_lanes,
+        unroll=plan.unroll,
+        masked=(plan.n_lanes > 1 or plan.unroll > 1),
         interpret=backend_interpret_flag(backend), out_dtype=out_dtype)
 
 
@@ -149,18 +173,19 @@ def _apply_bwd(backend, bn, res, dy):
                          "no transposed schedule available for the backward "
                          "pass — rebuild via plan_matmul(..., with_grad=True)")
     dyf = dy.astype(jnp.float32)
-    # dx = Wᵀ @ dy under the transposed schedule; gather_idx maps each
-    # transposed-schedule item back into the forward plan's block storage.
-    blocks_t = plan.lhs_blocks[g.gather_idx].transpose(0, 2, 1)
-    dx = _run_spmm(g, dyf, backend=backend, blocks=blocks_t, bn=bn,
+    # dx = Wᵀ @ dy under the transposed schedule; the grad plan's slot_idx
+    # addresses the forward weight storage and the kernel contracts along
+    # block rows (transpose_lhs) — zero copies of W.
+    dx = _run_spmm(g, dyf, backend=backend, blocks=plan.lhs_blocks, bn=bn,
                    out_dtype=jnp.float32).astype(x.dtype)
-    # dW[i] = dy[m_i·bm:(m_i+1)·bm] @ x[k_i·bk:(k_i+1)·bk]ᵀ — block SDDMM.
-    # The result is already in the plan's storage (schedule) order.
+    # dW[s] = dy[brow_s·bm:(brow_s+1)·bm] @ x[bcol_s·bk:(bcol_s+1)·bk]ᵀ —
+    # block SDDMM, emitted directly in the plan's (original BSR) storage
+    # order via the stored block coordinates.
     bm, bk = plan.block_shape
     gm, gk = plan.grid
     dyb = dyf.reshape(gm, bm, -1)
     xb = x.astype(jnp.float32).reshape(gk, bk, -1)
-    dW = jnp.einsum("imn,ikn->imk", dyb[plan.m_idx], xb[plan.k_idx])
+    dW = jnp.einsum("imn,ikn->imk", dyb[plan.a_brow], xb[plan.a_bcol])
     dplan = _zero_cotangent(plan)
     dplan = dplan.replace(lhs_blocks=dW.astype(plan.lhs_blocks.dtype))
     return dplan, dx
@@ -174,9 +199,9 @@ def apply_plan(plan: SegmentPlan, x: jax.Array, *, bn: int = 512,
     """Differentiable ``y = W @ x`` for an spmm plan (``x``: ``(K, N)``).
 
     Gradients flow to ``plan.lhs_blocks`` (the trainable block values, in
-    schedule order) and to ``x``; all schedule/index leaves get symbolic-zero
-    cotangents.  Requires the plan to carry a ``grad_plan`` (built by
-    ``plan_matmul(..., with_grad=True)``).
+    original BSR storage order) and to ``x``; all schedule/index leaves get
+    symbolic-zero cotangents.  Requires the plan to carry a ``grad_plan``
+    (built by ``plan_matmul(..., with_grad=True)``).
     """
     if plan.kind != SPMM:
         raise ValueError("apply_plan supports spmm plans; execute spgemm "

@@ -32,23 +32,26 @@ _LEAF_FIELDS = (
     "lhs_blocks", "rhs_blocks",
     "m_idx", "k_idx",
     "a_idx", "b_idx", "c_idx",
+    "slot_idx", "valid",
     "seg_start", "seg_write", "accum_prev",
     "row_mask",
     "a_brow", "a_bcol", "b_brow", "b_bcol", "c_brow_arr", "c_bcol_arr",
-    "gather_idx",
     "grad_plan",
 )
 _AUX_FIELDS = ("kind", "policy", "block_shape", "grid", "rhs_grid",
-               "n_out_blocks", "traffic_items", "fingerprint", "backend")
+               "n_out_blocks", "traffic_items", "fingerprint", "backend",
+               "n_lanes", "unroll", "transpose_lhs")
 
 
 @dataclasses.dataclass(eq=False)   # array fields make generated __eq__ ambiguous
 class SegmentPlan:
     """Frozen Segment schedule + block values for one sparse matmul.
 
-    ``kind == "spmm"``: ``lhs_blocks`` are the A tiles **in schedule order**
-    (``m_idx``/``k_idx`` give each item's block coordinates); calling the
-    plan with a dense ``(K, N)`` right-hand side returns the dense
+    ``kind == "spmm"``: ``lhs_blocks`` are the A tiles in **original BSR
+    storage order** (``a_brow``/``a_bcol`` give each stored block's
+    coordinates); the lane-major schedule addresses them through
+    ``slot_idx``, so realizing a plan never gathers block values.  Calling
+    the plan with a dense ``(K, N)`` right-hand side returns the dense
     ``(M, N)`` product.
 
     ``kind == "spgemm"``: ``lhs_blocks``/``rhs_blocks`` are the A/B tiles in
@@ -67,6 +70,9 @@ class SegmentPlan:
     traffic_items: Tuple[Tuple[str, float], ...]  # frozen traffic estimate
     fingerprint: str                              # pattern+policy hash
     backend: Optional[str] = None                 # preferred backend | None=default
+    n_lanes: int = 1                              # parallel lanes in the grid
+    unroll: int = 1                               # items per grid step
+    transpose_lhs: bool = False                   # kernel contracts Aᵀ (bwd)
 
     # --- pytree leaves (device arrays; None where not applicable) ---
     lhs_blocks: Optional[jax.Array] = None
@@ -76,6 +82,8 @@ class SegmentPlan:
     a_idx: Optional[jax.Array] = None
     b_idx: Optional[jax.Array] = None
     c_idx: Optional[jax.Array] = None
+    slot_idx: Optional[jax.Array] = None
+    valid: Optional[jax.Array] = None
     seg_start: Optional[jax.Array] = None
     seg_write: Optional[jax.Array] = None
     accum_prev: Optional[jax.Array] = None
@@ -86,7 +94,6 @@ class SegmentPlan:
     b_bcol: Optional[jax.Array] = None
     c_brow_arr: Optional[jax.Array] = None
     c_bcol_arr: Optional[jax.Array] = None
-    gather_idx: Optional[jax.Array] = None
     grad_plan: Optional["SegmentPlan"] = None
 
     # ------------------------------------------------------------------
@@ -110,7 +117,18 @@ class SegmentPlan:
 
     @property
     def n_items(self) -> int:
+        """Padded schedule length (``n_lanes * lane_len``, pads included)."""
         return int(self.seg_start.shape[0])
+
+    @property
+    def lane_len(self) -> int:
+        return self.n_items // self.n_lanes
+
+    @property
+    def n_blocks(self) -> int:
+        """Number of *stored* lhs blocks (original BSR order)."""
+        src = self.lhs_blocks if self.lhs_blocks is not None else self.a_brow
+        return int(src.shape[0])
 
     @property
     def traffic(self) -> Dict[str, float]:
@@ -146,8 +164,8 @@ class SegmentPlan:
     def with_values(self, lhs_blocks, rhs_blocks=None) -> "SegmentPlan":
         """Same schedule, new block values (e.g. the current train params).
 
-        ``lhs_blocks`` must match the plan's storage layout: schedule order
-        for spmm plans, original BSR order for spgemm plans.
+        ``lhs_blocks`` must match the plan's storage layout: original BSR
+        (row-major) block order for both plan kinds.
         """
         kw: Dict[str, Any] = {"lhs_blocks": lhs_blocks}
         if rhs_blocks is not None:

@@ -1,10 +1,14 @@
 """``plan_matmul`` — the front door: pattern → :class:`SegmentPlan`.
 
-Planning is host-side numpy work (ordering, folding, finalization) that only
-depends on the *sparsity pattern*, not the block values — so plans are cached
-by a pattern fingerprint and re-realized with fresh values per call.  Static
-weight sparsity amortizes the scheduling cost exactly as DESIGN.md §2 argues;
-the cache makes that amortization automatic instead of manual.
+Planning is host-side numpy work (ordering, folding, lane partitioning,
+finalization) that only depends on the *sparsity pattern*, not the block
+values — so plans are cached by a pattern fingerprint and re-realized with
+fresh values per call.  Static weight sparsity amortizes the scheduling cost
+exactly as DESIGN.md §2 argues; the cache makes that amortization automatic
+instead of manual.  Realization is **zero-copy**: block values ride along in
+original BSR storage order and the schedule addresses them through a
+``slot_idx`` scalar-prefetch array, so a cache hit never gathers O(nnz)
+data on the host.
 
 ``plan_matmul(A, B_or_shape)`` dispatches on the right-hand side:
 
@@ -13,22 +17,28 @@ the cache makes that amortization automatic instead of manual.
   hint; any dense rhs with matching K can be passed at execution time);
 * ``with_grad=True``         → the plan additionally carries the transposed
   schedule (``grad_plan``) so :func:`repro.api.executor.apply_plan` can run
-  the backward pass.
+  the backward pass against the *forward* weight storage (the kernel's
+  ``transpose_lhs`` mode — no transposed copy of W exists);
+* ``n_lanes > 1``            → the schedule is split into load-balanced
+  parallel lanes at segment-chain boundaries (see
+  :func:`repro.core.schedule.partition_lanes`); ``unroll`` additionally
+  groups items per grid step.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, Optional, Tuple, Union
+from typing import Dict, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core.formats import BSR
 from repro.core.policies import get_policy
-from repro.core.schedule import (build_spgemm_schedule, build_spmm_schedule,
-                                 finalize_schedule, spgemm_schedule_traffic,
-                                 spmm_schedule_traffic)
+from repro.core.schedule import (LaneLayout, build_spgemm_schedule,
+                                 build_spmm_schedule, finalize_schedule,
+                                 lane_select, lane_traffic_spgemm,
+                                 lane_traffic_spmm, partition_lanes)
 
 from .backends import resolve_backend
 from .plan import SPGEMM, SPMM, SegmentPlan
@@ -45,11 +55,11 @@ def _scale_spmm_traffic(basis: dict, n_cols: int) -> dict:
     dense column count (the basis is evaluated at ``n_cols=1``), so the
     *schedule* — and therefore the plan cache entry — never depends on N.
     """
-    b = basis["b_bytes"] * n_cols
-    c = basis["c_bytes"] * n_cols
-    return dict(a_bytes=basis["a_bytes"], b_bytes=b, c_bytes=c,
-                total=basis["a_bytes"] + b + c,
-                b_fetches=basis["b_fetches"], c_segments=basis["c_segments"])
+    out = dict(basis)
+    out["b_bytes"] = basis["b_bytes"] * n_cols
+    out["c_bytes"] = basis["c_bytes"] * n_cols
+    out["total"] = basis["a_bytes"] + out["b_bytes"] + out["c_bytes"]
+    return out
 
 
 def _pattern_bytes(h, m: BSR) -> None:
@@ -60,13 +70,15 @@ def _pattern_bytes(h, m: BSR) -> None:
 
 
 def pattern_fingerprint(kind: str, policy_key: str, fold_len: Optional[int],
-                        with_grad: bool, *mats: BSR) -> str:
+                        with_grad: bool, *mats: BSR, n_lanes: int = 1,
+                        unroll: int = 1) -> str:
     """Digest of everything the *schedule* depends on (never block values,
     never the dense-N traffic hint).  ``policy_key`` should include the
     policy's registration serial so re-registering a name under a different
     ordering can't be served a stale schedule."""
     h = hashlib.sha1()
-    h.update(f"{kind}|{policy_key}|{fold_len}|{with_grad}".encode())
+    h.update(f"{kind}|{policy_key}|{fold_len}|{with_grad}"
+             f"|lanes={n_lanes}|unroll={unroll}".encode())
     for m in mats:
         _pattern_bytes(h, m)
     return h.hexdigest()
@@ -74,13 +86,15 @@ def pattern_fingerprint(kind: str, policy_key: str, fold_len: Optional[int],
 
 @dataclasses.dataclass
 class _PlanTemplate:
-    """A value-free plan + the gather needed to fill fresh values.
+    """A value-free plan; realization attaches fresh block values verbatim.
 
-    Traffic is stored as a unit-N basis and re-priced per realize so one
-    template serves every dense width of the same pattern."""
+    There is deliberately no permutation here: the schedule addresses block
+    storage through ``slot_idx``, so ``realize`` is a device upload of the
+    caller's arrays (identity when they already live on device) — never an
+    O(nnz) gather.  Traffic is stored as a unit-N basis and re-priced per
+    realize so one template serves every dense width of the same pattern."""
 
-    plan: SegmentPlan                       # lhs/rhs_blocks are None
-    fwd_perm: Optional[np.ndarray]          # spmm: original → schedule order
+    plan: SegmentPlan                           # lhs/rhs_blocks are None
     traffic_basis: Optional[dict] = None        # spmm fwd, at n_cols=1
     grad_traffic_basis: Optional[dict] = None   # spmm bwd, at n_cols=1
 
@@ -92,7 +106,7 @@ class _PlanTemplate:
                 grad = grad.replace(traffic_items=_freeze_traffic(
                     _scale_spmm_traffic(self.grad_traffic_basis, n_cols_hint)))
             return self.plan.replace(
-                lhs_blocks=jnp.asarray(a.blocks[self.fwd_perm]),
+                lhs_blocks=jnp.asarray(a.blocks),
                 traffic_items=_freeze_traffic(
                     _scale_spmm_traffic(self.traffic_basis, n_cols_hint)),
                 grad_plan=grad, backend=backend)
@@ -114,44 +128,72 @@ def plan_cache_stats() -> Dict[str, int]:
     return dict(_STATS, size=len(_CACHE))
 
 
+def _lane_flags(layout: LaneLayout, seg_start, seg_write, accum_prev) -> dict:
+    """Lane-major schedule flag/index arrays as jnp leaves."""
+    return dict(
+        seg_start=jnp.asarray(lane_select(layout, seg_start, zero_pads=True)),
+        seg_write=jnp.asarray(lane_select(layout, seg_write, zero_pads=True)),
+        accum_prev=jnp.asarray(
+            lane_select(layout, accum_prev, zero_pads=True)),
+        valid=jnp.asarray(layout.valid.reshape(-1).astype(np.int32)))
+
+
 def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
-                         with_grad: bool, fingerprint: str) -> _PlanTemplate:
+                         with_grad: bool, n_lanes: int, unroll: int,
+                         fingerprint: str) -> _PlanTemplate:
     sched = build_spmm_schedule(a, policy=policy, fold_len=fold_len)
     fin = finalize_schedule(sched.seg_start, sched.m, n_slots=sched.n_m_blocks)
     bm, bk = a.block_shape
-    fwd_perm = sched.a_idx.astype(np.int64)
+    layout = partition_lanes(sched.m, n_lanes, unroll=unroll, policy=policy)
+    lane_m = lane_select(layout, sched.m)
+    lane_k = lane_select(layout, sched.k)
+    flags = _lane_flags(layout, sched.seg_start, sched.seg_write,
+                        fin.accum_prev)
+    basis = lane_traffic_spmm(
+        lane_m, lane_k, np.asarray(flags["seg_start"]),
+        layout.valid.reshape(-1), layout.n_lanes, bm, bk, 1)
+    basis.update(layout.stats)
 
     grad_plan = None
-    gather_idx = None
     grad_basis = None
     if with_grad:
-        # transposed matrix Wᵀ: same blocks, coords swapped, re-sorted
-        # row-major; schedule it independently, then express its per-item
-        # block gather in the *forward plan's storage order* so the backward
-        # pass reads the same weight array (no duplicate copy).
+        # Transposed matrix Wᵀ: same stored blocks, coords swapped, re-sorted
+        # row-major; schedule it independently, then address each item's
+        # block in the *forward storage order* via slot_idx — the kernel's
+        # transpose_lhs mode contracts along block rows, so the backward
+        # pass reads the forward weight array with no transposed copy.
         t_order = np.lexsort((a.brow, a.bcol)).astype(np.int64)
         wt = BSR(shape=(a.shape[1], a.shape[0]), block_shape=(bk, bm),
                  brow=a.bcol[t_order].copy(), bcol=a.brow[t_order].copy(),
-                 blocks=np.empty((a.nblocks, bk, bm), np.float32))
+                 blocks=np.empty((a.nblocks, 1, 1), np.float32))
         t_sched = build_spmm_schedule(wt, policy=policy, fold_len=fold_len)
         t_fin = finalize_schedule(t_sched.seg_start, t_sched.m,
                                   n_slots=t_sched.n_m_blocks)
-        inv_fwd = np.zeros_like(fwd_perm)
-        inv_fwd[fwd_perm] = np.arange(fwd_perm.size)
-        gather_idx = inv_fwd[t_order[t_sched.a_idx.astype(np.int64)]]
-        grad_basis = spmm_schedule_traffic(t_sched, bk, bm, 1)
+        t_layout = partition_lanes(t_sched.m, n_lanes, unroll=unroll,
+                                   policy=policy)
+        t_slot = t_order[t_sched.a_idx.astype(np.int64)]
+        t_lane_m = lane_select(t_layout, t_sched.m)
+        t_lane_k = lane_select(t_layout, t_sched.k)
+        t_flags = _lane_flags(t_layout, t_sched.seg_start, t_sched.seg_write,
+                              t_fin.accum_prev)
+        grad_basis = lane_traffic_spmm(
+            t_lane_m, t_lane_k, np.asarray(t_flags["seg_start"]),
+            t_layout.valid.reshape(-1), t_layout.n_lanes, bk, bm, 1)
+        grad_basis.update(t_layout.stats)
         grad_plan = SegmentPlan(
             kind=SPMM, policy=policy, block_shape=(bk, bm),
             grid=(t_sched.n_m_blocks, t_sched.n_k_blocks), rhs_grid=None,
             n_out_blocks=t_sched.n_m_blocks,
             traffic_items=(),   # re-priced per realize from grad_basis
             fingerprint=fingerprint + ":grad",
-            m_idx=jnp.asarray(t_sched.m), k_idx=jnp.asarray(t_sched.k),
-            seg_start=jnp.asarray(t_sched.seg_start),
-            seg_write=jnp.asarray(t_sched.seg_write),
-            accum_prev=jnp.asarray(t_fin.accum_prev),
+            n_lanes=t_layout.n_lanes, unroll=unroll, transpose_lhs=True,
+            m_idx=jnp.asarray(t_lane_m.astype(np.int32)),
+            k_idx=jnp.asarray(t_lane_k.astype(np.int32)),
+            slot_idx=jnp.asarray(lane_select(layout=t_layout, arr=t_slot)
+                                 .astype(np.int32)),
             row_mask=jnp.asarray(t_fin.row_mask),
-            gather_idx=jnp.asarray(gather_idx, jnp.int32))
+            a_brow=jnp.asarray(a.brow), a_bcol=jnp.asarray(a.bcol),
+            **t_flags)
 
     plan = SegmentPlan(
         kind=SPMM, policy=policy, block_shape=(bm, bk),
@@ -159,40 +201,50 @@ def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
         n_out_blocks=sched.n_m_blocks,
         traffic_items=(),   # re-priced per realize from traffic_basis
         fingerprint=fingerprint,
-        m_idx=jnp.asarray(sched.m), k_idx=jnp.asarray(sched.k),
-        seg_start=jnp.asarray(sched.seg_start),
-        seg_write=jnp.asarray(sched.seg_write),
-        accum_prev=jnp.asarray(fin.accum_prev),
+        n_lanes=layout.n_lanes, unroll=unroll,
+        m_idx=jnp.asarray(lane_m.astype(np.int32)),
+        k_idx=jnp.asarray(lane_k.astype(np.int32)),
+        slot_idx=jnp.asarray(lane_select(layout, sched.a_idx)
+                             .astype(np.int32)),
         row_mask=jnp.asarray(fin.row_mask),
-        grad_plan=grad_plan)
-    return _PlanTemplate(plan=plan, fwd_perm=fwd_perm,
-                         traffic_basis=spmm_schedule_traffic(sched, bm, bk, 1),
+        a_brow=jnp.asarray(a.brow), a_bcol=jnp.asarray(a.bcol),
+        grad_plan=grad_plan, **flags)
+    return _PlanTemplate(plan=plan, traffic_basis=basis,
                          grad_traffic_basis=grad_basis)
 
 
 def _build_spgemm_template(a: BSR, b: BSR, policy: str,
-                           fold_len: Optional[int],
+                           fold_len: Optional[int], n_lanes: int, unroll: int,
                            fingerprint: str) -> _PlanTemplate:
     sched = build_spgemm_schedule(a, b, policy=policy, fold_len=fold_len)
     fin = finalize_schedule(sched.seg_start, sched.c_idx)
     bm, bk = a.block_shape
     bn = b.block_shape[1]
+    layout = partition_lanes(sched.c_idx, n_lanes, unroll=unroll,
+                             policy=policy)
+    lane_a = lane_select(layout, sched.a_idx)
+    lane_b = lane_select(layout, sched.b_idx)
+    lane_c = lane_select(layout, sched.c_idx)
+    flags = _lane_flags(layout, sched.seg_start, sched.seg_write,
+                        fin.accum_prev)
+    traffic = lane_traffic_spgemm(
+        lane_a, lane_b, lane_c, np.asarray(flags["seg_start"]),
+        layout.valid.reshape(-1), layout.n_lanes, bm, bk, bn)
+    traffic.update(layout.stats)
     plan = SegmentPlan(
         kind=SPGEMM, policy=policy, block_shape=(bm, bk),
         grid=a.grid, rhs_grid=b.grid, n_out_blocks=sched.n_c_blocks,
-        traffic_items=_freeze_traffic(
-            spgemm_schedule_traffic(sched, bm, bk, bn)),
+        traffic_items=_freeze_traffic(traffic),
         fingerprint=fingerprint,
-        a_idx=jnp.asarray(sched.a_idx), b_idx=jnp.asarray(sched.b_idx),
-        c_idx=jnp.asarray(sched.c_idx),
-        seg_start=jnp.asarray(sched.seg_start),
-        seg_write=jnp.asarray(sched.seg_write),
-        accum_prev=jnp.asarray(fin.accum_prev),
+        n_lanes=layout.n_lanes, unroll=unroll,
+        a_idx=jnp.asarray(lane_a.astype(np.int32)),
+        b_idx=jnp.asarray(lane_b.astype(np.int32)),
+        c_idx=jnp.asarray(lane_c.astype(np.int32)),
         a_brow=jnp.asarray(a.brow), a_bcol=jnp.asarray(a.bcol),
         b_brow=jnp.asarray(b.brow), b_bcol=jnp.asarray(b.bcol),
         c_brow_arr=jnp.asarray(sched.c_brow),
-        c_bcol_arr=jnp.asarray(sched.c_bcol))
-    return _PlanTemplate(plan=plan, fwd_perm=None)
+        c_bcol_arr=jnp.asarray(sched.c_bcol), **flags)
+    return _PlanTemplate(plan=plan)
 
 
 def _rhs_to_hint(a: BSR, b) -> Tuple[Optional[BSR], int]:
@@ -220,6 +272,7 @@ def _rhs_to_hint(a: BSR, b) -> Tuple[Optional[BSR], int]:
 def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
                 backend: Optional[str] = None, fold_len: Optional[int] = None,
                 with_grad: bool = False, n_cols_hint: Optional[int] = None,
+                n_lanes: int = 1, unroll: int = 1,
                 cache: bool = True) -> SegmentPlan:
     """Plan a Segment-dataflow matmul for the sparsity pattern of ``a``.
 
@@ -234,6 +287,10 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
       with_grad: also build the transposed schedule so ``apply_plan`` can run
         the backward pass (SpMM only).
       n_cols_hint: overrides the traffic model's dense-N estimate.
+      n_lanes: split the schedule into this many load-balanced parallel
+        lanes (clamped to the number of output segments).
+      unroll: schedule items executed per kernel grid step (aligned at
+        plan time; amortizes grid overhead on small blocks).
       cache: reuse the pattern-fingerprint plan cache.
     """
     if backend is not None:
@@ -248,16 +305,19 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
     kind = SPGEMM if b is not None else SPMM
     mats = (a, b) if b is not None else (a,)
     key = pattern_fingerprint(kind, f"{policy}#{pol.serial}", fold_len,
-                              with_grad, *mats)
+                              with_grad, *mats, n_lanes=n_lanes,
+                              unroll=unroll)
     tpl = _CACHE.get(key) if cache else None
     if tpl is None:
         if kind == SPMM:
-            tpl = _build_spmm_template(a, policy, fold_len, with_grad, key)
+            tpl = _build_spmm_template(a, policy, fold_len, with_grad,
+                                       n_lanes, unroll, key)
         else:
-            tpl = _build_spgemm_template(a, b, policy, fold_len, key)
+            tpl = _build_spgemm_template(a, b, policy, fold_len, n_lanes,
+                                         unroll, key)
+        _STATS["misses"] += 1   # a build is a miss whether or not it's kept
         if cache:
             _CACHE[key] = tpl
-            _STATS["misses"] += 1
     else:
         _STATS["hits"] += 1
     return tpl.realize(a, b, backend, hint)

@@ -6,7 +6,8 @@ Public surface:
 * dataflow:  :func:`run_selecta`, :func:`segment_spgemm_elementwise`,
              static references in :mod:`repro.core.dataflows`
 * folding:   :func:`spatial_fold`, :func:`fold_segments`, :func:`balance_bins`
-* schedules: :func:`build_spmm_schedule`, :func:`build_spgemm_schedule`
+* schedules: :func:`build_spmm_schedule`, :func:`build_spgemm_schedule`,
+             :func:`partition_lanes` (lane-parallel realization)
 * policies:  :func:`register_policy`, :func:`get_policy`,
              :func:`available_policies` (the dataflow configuration space)
 """
@@ -16,9 +17,11 @@ from .segmentbc import VSpace, segment_spgemm_elementwise
 from .folding import balance_bins, fold_segments, round_robin_bins, spatial_fold, temporal_fold_spills
 from .policies import (SchedulePolicy, available_policies, get_policy,
                        register_policy, unregister_policy)
-from .schedule import (SegmentFinalization, SpgemmSchedule, SpmmSchedule,
-                       build_spgemm_schedule, build_spmm_schedule,
-                       finalize_schedule, shard_schedule,
+from .schedule import (LaneLayout, SegmentFinalization, SpgemmSchedule,
+                       SpmmSchedule, build_spgemm_schedule,
+                       build_spmm_schedule, finalize_schedule, lane_select,
+                       lane_traffic_spgemm, lane_traffic_spmm,
+                       partition_lanes, shard_schedule,
                        spgemm_schedule_traffic, spmm_schedule_traffic,
                        symbolic_spgemm)
 
@@ -30,8 +33,9 @@ __all__ = [
     "temporal_fold_spills",
     "SchedulePolicy", "available_policies", "get_policy", "register_policy",
     "unregister_policy",
-    "SegmentFinalization", "SpgemmSchedule", "SpmmSchedule",
+    "LaneLayout", "SegmentFinalization", "SpgemmSchedule", "SpmmSchedule",
     "build_spgemm_schedule", "build_spmm_schedule", "finalize_schedule",
-    "shard_schedule", "spgemm_schedule_traffic", "spmm_schedule_traffic",
-    "symbolic_spgemm",
+    "lane_select", "lane_traffic_spgemm", "lane_traffic_spmm",
+    "partition_lanes", "shard_schedule", "spgemm_schedule_traffic",
+    "spmm_schedule_traffic", "symbolic_spgemm",
 ]

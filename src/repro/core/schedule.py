@@ -20,9 +20,13 @@ identical results — only traffic/balance differ):
   direction inside runs + :mod:`repro.core.folding` splitting of oversized
   runs for load balance.
 
-:func:`schedule_traffic` evaluates a schedule under the revisiting model so
-benchmarks can report bytes saved — the TPU analogue of the paper's reuse
-metrics.
+:func:`partition_lanes` realizes the paper's dynamic remapping across PEs:
+the finished 1-D schedule is cut into load-balanced parallel lanes at
+segment-chain boundaries, which the kernels run as a "parallel" grid axis
+(megacore / multi-core).  :func:`lane_traffic_spmm` /
+:func:`lane_traffic_spgemm` evaluate a (possibly lane-cut) schedule under
+the revisiting model so benchmarks can report bytes saved — the TPU
+analogue of the paper's reuse metrics.
 """
 from __future__ import annotations
 
@@ -355,62 +359,221 @@ def build_spgemm_schedule(a: BSR, b: BSR, policy: str = "segment",
 
 
 # ---------------------------------------------------------------------------
+# Lane partitioning — the load-balance half of the paper's dynamic remapping.
+# A finished schedule is split into ``n_lanes`` independent work streams at
+# segment-chain boundaries; lanes run concurrently as a "parallel" Pallas
+# grid axis (megacore / multi-core).
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class LaneLayout:
+    """Lane-parallel realization of a finished 1-D schedule.
+
+    ``perm[l, j]`` is the original schedule-item index executed at step ``j``
+    of lane ``l``, or ``-1`` for a padding no-op (lanes are equal-length so
+    the kernel grid is rectangular).  ``filled`` replaces every ``-1`` with
+    the most recent real item of the same lane, so *index* arrays (block
+    slots, coordinates) stay valid on pads — a pad re-addresses the resident
+    blocks and is masked in the kernel; *flag* arrays must be zeroed on pads
+    instead.  All items of one output tile (a segment chain, including folded
+    continuations and non-contiguous revisits) live in exactly one lane, in
+    schedule order — lanes never race on an output block and the
+    ``accum_prev`` read-modify-write flags stay valid verbatim.
+    """
+
+    perm: np.ndarray        # (n_lanes, lane_len) int64, -1 = pad
+    filled: np.ndarray      # (n_lanes, lane_len) int64, pads forward-filled
+    valid: np.ndarray       # (n_lanes, lane_len) bool
+    n_lanes: int
+    lane_len: int
+    stats: dict             # load-balance stats from shard_schedule
+
+    @property
+    def n_padded_items(self) -> int:
+        return int(self.perm.size)
+
+
+def partition_lanes(owner: np.ndarray, n_lanes: int, *, unroll: int = 1,
+                    policy: str = "segment") -> LaneLayout:
+    """Split a schedule's item list into ``n_lanes`` balanced lanes.
+
+    ``owner[i]`` is the output-tile id of schedule item ``i`` (block row for
+    SpMM, C slot for SpGEMM).  Items are grouped per owner (a whole segment
+    chain is atomic — folded continuations included), the groups are packed
+    into lanes by :func:`shard_schedule`'s cost model (LPT for fold-capable
+    policies, round-robin for static ones), and each lane keeps its groups in
+    first-appearance order so SELECTA boundary chaining survives wherever two
+    adjacent runs land in the same lane.
+
+    ``unroll > 1`` additionally pads every group to a multiple of ``unroll``
+    so a kernel that executes ``unroll`` items per grid step never straddles
+    two output tiles within one step.
+
+    ``n_lanes`` is clamped to the number of owner groups — a lane with no
+    real work would flush an undefined output buffer.
+    """
+    if n_lanes < 1:
+        raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
+    if unroll < 1:
+        raise ValueError(f"unroll must be >= 1, got {unroll}")
+    owner = np.asarray(owner, dtype=np.int64)
+    n = owner.size
+    if n == 0:
+        z = np.zeros((1, 0), dtype=np.int64)
+        return LaneLayout(perm=z, filled=z.copy(), valid=z.astype(bool),
+                          n_lanes=1, lane_len=0,
+                          stats={"imbalance": 1.0, "max_load": 0,
+                                 "mean_load": 0.0})
+    first: dict = {}
+    groups: list = []
+    for i, o in enumerate(owner.tolist()):
+        gi = first.get(o)
+        if gi is None:
+            first[o] = len(groups)
+            groups.append([i])
+        else:
+            groups[gi].append(i)
+    sizes = np.asarray([len(g) for g in groups], dtype=np.int64)
+    eff = max(1, min(n_lanes, len(groups)))
+    assign, stats = shard_schedule(sizes, eff, policy=policy)
+    lanes: list = [[] for _ in range(eff)]
+    for gi, g in enumerate(groups):
+        lane = lanes[int(assign[gi])]
+        lane.extend(g)
+        lane.extend([-1] * ((-len(g)) % unroll))
+    lane_len = max(len(l) for l in lanes)
+    perm = np.full((eff, lane_len), -1, dtype=np.int64)
+    for li, l in enumerate(lanes):
+        perm[li, :len(l)] = l
+    # forward-fill pads with the last real item of their lane (every lane
+    # starts with a real item: pads only follow groups)
+    pos = np.maximum.accumulate(
+        np.where(perm >= 0, np.arange(lane_len)[None, :], -1), axis=1)
+    filled = np.take_along_axis(perm, np.maximum(pos, 0), axis=1)
+    filled = np.where(pos >= 0, filled, 0)
+    stats = dict(stats, n_lanes=eff,
+                 padded_items=int((perm < 0).sum()))
+    stats.pop("loads", None)
+    return LaneLayout(perm=perm, filled=filled, valid=perm >= 0,
+                      n_lanes=eff, lane_len=lane_len, stats=stats)
+
+
+def lane_select(layout: LaneLayout, arr: np.ndarray,
+                zero_pads: bool = False) -> np.ndarray:
+    """Gather a per-item schedule array into flattened lane-major order.
+
+    Index arrays (block slots/coordinates) keep the previous real item's
+    value on pads (``zero_pads=False``: no spurious Pallas re-fetch, no
+    output-buffer flush of an unvisited tile); flag arrays
+    (``seg_start``/``seg_write``/``accum_prev``) are zeroed on pads so a
+    padding step neither initializes nor writes anything.
+    """
+    arr = np.asarray(arr)
+    out = arr[layout.filled.reshape(-1)]
+    if zero_pads:
+        out = np.where(layout.valid.reshape(-1), out, 0).astype(arr.dtype)
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Traffic model under Pallas revisiting semantics
 # ---------------------------------------------------------------------------
 
 
+def _revisit_traffic(fetch_streams, owner, seg_start, valid, n_lanes,
+                     c_tile_bytes):
+    """Shared revisiting-model core over flattened lane-major arrays.
+
+    ``fetch_streams`` is a list of ``(arr, tile_bytes, always)`` operand
+    streams: an operand tile is fetched when its index differs from the
+    previous step's *within the same lane* (lane boundaries always re-fetch:
+    the SELECTA boundary-reuse chain is broken where a schedule is cut into
+    lanes), or on every valid step when ``always``.  C tiles are written once
+    per segment head and read back on owner revisits (folded continuations /
+    non-contiguous re-starts).  Pads (``valid == 0``) move no data.
+    """
+    valid = np.asarray(valid, dtype=bool)
+    fetches = []
+    for arr, tile_bytes, always in fetch_streams:
+        a2 = np.asarray(arr).reshape(n_lanes, -1)
+        delta = np.ones_like(a2, dtype=bool)
+        if a2.shape[1] > 1:
+            delta[:, 1:] = a2[:, 1:] != a2[:, :-1]
+        if always:
+            n_fetch = int(valid.sum())
+        else:
+            n_fetch = int((delta.reshape(-1) & valid).sum())
+        fetches.append((n_fetch, n_fetch * tile_bytes))
+    seg_heads = np.nonzero(np.asarray(seg_start) & valid)[0]
+    seen = set()
+    c_reads = 0
+    owner = np.asarray(owner)
+    for h in seg_heads:
+        o = int(owner[h])
+        if o in seen:
+            c_reads += 1
+        seen.add(o)
+    c_bytes = (seg_heads.size + c_reads) * c_tile_bytes
+    return fetches, int(seg_heads.size), c_bytes
+
+
+def lane_traffic_spmm(m, k, seg_start, valid, n_lanes: int, bm: int, bk: int,
+                      n_cols: int, bytes_per_el: int = 4) -> dict:
+    """Revisiting-model HBM bytes for the lane-parallel SpMM kernel.
+
+    Arrays are flattened lane-major (``n_lanes * lane_len``).  A tiles are
+    fetched once per valid item; a B row-block is fetched when ``k`` changes
+    within a lane (and always at a lane start — lane cuts break the
+    boundary-k chaining the Segment order set up); C tiles follow the
+    segment write/revisit rule, with owners confined to single lanes.
+    """
+    fetches, c_segments, c_bytes = _revisit_traffic(
+        [(k, 0, True), (k, bk * n_cols * bytes_per_el, False)],
+        m, seg_start, valid, n_lanes, bm * n_cols * bytes_per_el)
+    a_bytes = fetches[0][0] * bm * bk * bytes_per_el
+    b_fetches, b_bytes = fetches[1]
+    total = a_bytes + b_bytes + c_bytes
+    return dict(a_bytes=a_bytes, b_bytes=b_bytes, c_bytes=c_bytes, total=total,
+                b_fetches=b_fetches, c_segments=c_segments)
+
+
+def lane_traffic_spgemm(a_idx, b_idx, c_idx, seg_start, valid, n_lanes: int,
+                        bm: int, bk: int, bn: int,
+                        bytes_per_el: int = 4) -> dict:
+    """Revisiting-model HBM bytes for the lane-parallel SpGEMM kernel."""
+    fetches, c_segments, c_bytes = _revisit_traffic(
+        [(a_idx, bm * bk * bytes_per_el, False),
+         (b_idx, bk * bn * bytes_per_el, False)],
+        c_idx, seg_start, valid, n_lanes, bm * bn * bytes_per_el)
+    _, a_bytes = fetches[0]
+    b_fetches, b_bytes = fetches[1]
+    total = a_bytes + b_bytes + c_bytes
+    return dict(a_bytes=a_bytes, b_bytes=b_bytes, c_bytes=c_bytes, total=total,
+                b_fetches=b_fetches, c_segments=c_segments)
+
+
 def spmm_schedule_traffic(sched: SpmmSchedule, bm: int, bk: int, n_cols: int,
                           bytes_per_el: int = 4) -> dict:
-    """HBM bytes for a 1-D grid SpMM kernel under revisiting semantics.
+    """HBM bytes for the single-lane SpMM schedule (see lane_traffic_spmm).
 
     Per step: A tile always fetched (distinct blocks); B row-block fetched iff
     ``k`` differs from the previous step; C row written at the end of each
     segment, and read back (accumulated) when a segment re-starts a C row that
     was already written (folding continuation or non-contiguous revisit).
     """
-    a_bytes = sched.n_items * bm * bk * bytes_per_el
-    k_delta = np.ones(sched.n_items, dtype=bool)
-    if sched.n_items > 1:
-        k_delta[1:] = sched.k[1:] != sched.k[:-1]
-    b_bytes = int(k_delta.sum()) * bk * n_cols * bytes_per_el
-    seg_heads = np.nonzero(sched.seg_start)[0]
-    c_writes = seg_heads.size
-    seen = set()
-    c_reads = 0
-    for h in seg_heads:
-        mm = int(sched.m[h])
-        if mm in seen:
-            c_reads += 1
-        seen.add(mm)
-    c_bytes = (c_writes + c_reads) * bm * n_cols * bytes_per_el
-    total = a_bytes + b_bytes + c_bytes
-    return dict(a_bytes=a_bytes, b_bytes=b_bytes, c_bytes=c_bytes, total=total,
-                b_fetches=int(k_delta.sum()), c_segments=int(c_writes))
+    valid = np.ones(sched.n_items, dtype=bool)
+    return lane_traffic_spmm(sched.m, sched.k, sched.seg_start, valid, 1,
+                             bm, bk, n_cols, bytes_per_el)
 
 
 def spgemm_schedule_traffic(sched: SpgemmSchedule, bm: int, bk: int, bn: int,
                             bytes_per_el: int = 4) -> dict:
     """Same revisiting model for the BSR×BSR kernel (tiles all block-sized)."""
-    n_items = sched.n_items
-    a_delta = np.ones(n_items, dtype=bool)
-    b_delta = np.ones(n_items, dtype=bool)
-    if n_items > 1:
-        a_delta[1:] = sched.a_idx[1:] != sched.a_idx[:-1]
-        b_delta[1:] = sched.b_idx[1:] != sched.b_idx[:-1]
-    a_bytes = int(a_delta.sum()) * bm * bk * bytes_per_el
-    b_bytes = int(b_delta.sum()) * bk * bn * bytes_per_el
-    seg_heads = np.nonzero(sched.seg_start)[0]
-    seen = set()
-    c_reads = 0
-    for h in seg_heads:
-        ci = int(sched.c_idx[h])
-        if ci in seen:
-            c_reads += 1
-        seen.add(ci)
-    c_bytes = (seg_heads.size + c_reads) * bm * bn * bytes_per_el
-    total = a_bytes + b_bytes + c_bytes
-    return dict(a_bytes=a_bytes, b_bytes=b_bytes, c_bytes=c_bytes, total=total,
-                b_fetches=int(b_delta.sum()), c_segments=int(seg_heads.size))
+    valid = np.ones(sched.n_items, dtype=bool)
+    return lane_traffic_spgemm(sched.a_idx, sched.b_idx, sched.c_idx,
+                               sched.seg_start, valid, 1, bm, bk, bn,
+                               bytes_per_el)
 
 
 def shard_schedule(sizes: np.ndarray, n_shards: int, policy: str = "segment"):

@@ -28,7 +28,7 @@ _NEG_INF = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-            scale, causal, window, offset, kv_len, bq, bkv, n_kv):
+            scale, causal, window, offset, kv_len, bq, bkv, n_kv, q_period):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -40,7 +40,13 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
     # block-level skip: with causal/window masking many KV blocks are fully
     # masked — do no work for them (structural block sparsity)
-    q_lo = offset + qi * bq                   # first absolute q position
+    q_row = qi * bq
+    if q_period is not None:
+        # GQA grouping: the q axis stacks `rep` query copies of length
+        # q_period; positions repeat per copy (q blocks never straddle a
+        # copy — q_period % bq == 0 is asserted at call time).
+        q_row = jax.lax.rem(q_row, q_period)
+    q_lo = offset + q_row                     # first absolute q position
     q_hi = q_lo + bq - 1
     k_lo = ki * bkv
     k_hi = k_lo + bkv - 1
@@ -82,31 +88,37 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 
 @functools.partial(jax.jit, static_argnames=(
-    "causal", "window", "offset", "kv_len", "bq", "bkv", "interpret",
-    "out_dtype"))
+    "causal", "window", "offset", "kv_len", "bq", "bkv", "q_period",
+    "interpret", "out_dtype"))
 def flash_attention(q, k, v, *, causal: bool = True, window=None,
                     offset=None, kv_len=None, bq: int = 128, bkv: int = 128,
-                    interpret: bool = False, out_dtype=None):
+                    q_period=None, interpret: bool = False, out_dtype=None):
     """q: (BH, Tq, D); k/v: (BH, Tk, D). Returns (BH, Tq, D).
 
     ``offset``: absolute position of q[0] (default Tk - Tq: queries are the
     final positions of the context).  ``kv_len``: number of live keys
-    (positions ≥ kv_len are padding and masked out).
+    (positions ≥ kv_len are padding and masked out).  ``q_period``: the q
+    axis holds several stacked query groups of this length sharing the K/V
+    rows (GQA grouping — positions repeat every ``q_period`` rows; must be
+    a multiple of ``bq``).
     """
     bh, tq, d = q.shape
     tk = k.shape[1]
     bq = min(bq, tq)
     bkv = min(bkv, tk)
     assert tq % bq == 0 and tk % bkv == 0
+    if q_period is not None:
+        assert q_period % bq == 0 and tq % q_period == 0, (tq, q_period, bq)
     n_q, n_kv = tq // bq, tk // bkv
-    offset = (tk - tq) if offset is None else offset
+    offset = (tk - (tq if q_period is None else q_period)) \
+        if offset is None else offset
     kv_len = tk if kv_len is None else kv_len
     scale = 1.0 / np.sqrt(d)
     out_dtype = out_dtype or q.dtype
 
     kernel = functools.partial(
         _kernel, scale=scale, causal=causal, window=window, offset=offset,
-        kv_len=kv_len, bq=bq, bkv=bkv, n_kv=n_kv)
+        kv_len=kv_len, bq=bq, bkv=bkv, n_kv=n_kv, q_period=q_period)
     return pl.pallas_call(
         kernel,
         grid=(bh, n_q, n_kv),

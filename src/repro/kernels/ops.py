@@ -65,17 +65,18 @@ def plan_spgemm(a: BSR, b: BSR, policy: str = "segment",
 
 def flash_mha(q, k, v, *, causal: bool = True, window: Optional[int] = None,
               bq: int = 128, bkv: int = 128, interpret: Optional[bool] = None):
-    """GQA flash attention. q: (B, Tq, H, D), k/v: (B, Tk, Hkv, D)."""
+    """GQA flash attention. q: (B, Tq, H, D), k/v: (B, Tk, Hkv, D).
+
+    Grouped queries are folded into the q axis — the ``rep = H/Hkv`` query
+    heads of one KV head run as ``rep`` stacked ``Tq``-long groups against a
+    single K/V copy (``q_period`` position wrap in the kernel), so each K/V
+    head is read from HBM once instead of ``rep`` times (the old path
+    materialized ``jnp.repeat`` copies of K and V).
+    """
     interpret = INTERPRET if interpret is None else interpret
     b, tq, h, d = q.shape
     tk, hkv = k.shape[1], k.shape[2]
     rep = h // hkv
-    if rep > 1:
-        k = jnp.repeat(k, rep, axis=2)
-        v = jnp.repeat(v, rep, axis=2)
-    qh = q.transpose(0, 2, 1, 3).reshape(b * h, tq, d)
-    kh = k.transpose(0, 2, 1, 3).reshape(b * h, tk, d)
-    vh = v.transpose(0, 2, 1, 3).reshape(b * h, tk, d)
     # pad Tq/Tk (at the end) to block multiples; real queries keep their
     # absolute positions via the explicit offset, padded keys are masked by
     # kv_len, padded query rows are sliced off.
@@ -83,16 +84,26 @@ def flash_mha(q, k, v, *, causal: bool = True, window: Optional[int] = None,
     bkv_eff = min(bkv, max(128, 1 << max(tk - 1, 0).bit_length()))
     pad_q = (-tq) % bq_eff
     pad_k = (-tk) % bkv_eff
-    if pad_q:
-        qh = jnp.pad(qh, ((0, 0), (0, pad_q), (0, 0)))
+    tq_pad = tq + pad_q
+    kh = k.transpose(0, 2, 1, 3).reshape(b * hkv, tk, d)
+    vh = v.transpose(0, 2, 1, 3).reshape(b * hkv, tk, d)
     if pad_k:
         kh = jnp.pad(kh, ((0, 0), (0, pad_k), (0, 0)))
         vh = jnp.pad(vh, ((0, 0), (0, pad_k), (0, 0)))
+    # (B, Tq, H, D) → (B, Hkv, rep, Tq_pad, D) → (B·Hkv, rep·Tq_pad, D):
+    # query heads of one KV head stack along the q axis (head h maps to KV
+    # head h // rep, matching jnp.repeat(..., axis=2) semantics).
+    qh = q.transpose(0, 2, 1, 3).reshape(b, hkv, rep, tq, d)
+    if pad_q:
+        qh = jnp.pad(qh, ((0, 0), (0, 0), (0, 0), (0, pad_q), (0, 0)))
+    qh = qh.reshape(b * hkv, rep * tq_pad, d)
     out = flash_attention(qh, kh, vh, causal=causal, window=window,
                           offset=tk - tq, kv_len=tk,
-                          bq=bq_eff, bkv=bkv_eff, interpret=interpret)
-    out = out[:, :tq, :]
-    return out.reshape(b, h, tq, d).transpose(0, 2, 1, 3)
+                          bq=bq_eff, bkv=bkv_eff,
+                          q_period=tq_pad if rep > 1 else None,
+                          interpret=interpret)
+    out = out.reshape(b, hkv, rep, tq_pad, d)[:, :, :, :tq]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, tq, h, d)
 
 
 def rg_lru_scan(x, a_gate, x_gate, a_param, h0=None, *, ct: int = 128,

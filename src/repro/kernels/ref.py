@@ -30,9 +30,18 @@ def bsr_to_dense(blocks, brow, bcol, grid_m, grid_k):
     return jax.lax.fori_loop(0, nb, body, out)
 
 
-def spmm_ref(blocks, brow, bcol, grid_m, grid_k, b_dense):
-    """C = BSR(A) @ B, computed densely."""
+def spmm_ref(blocks, brow, bcol, grid_m, grid_k, b_dense,
+             transpose_lhs: bool = False):
+    """C = BSR(A) @ B (or BSR(A)ᵀ @ B), computed densely.
+
+    ``brow``/``bcol``/``grid_m``/``grid_k`` always describe the *stored* A;
+    ``transpose_lhs`` contracts along its rows instead (the backward-pass
+    oracle reads the forward storage, mirroring the kernel's zero-copy
+    transpose mode).
+    """
     a = bsr_to_dense(blocks, brow, bcol, grid_m, grid_k)
+    if transpose_lhs:
+        a = a.T
     return (a.astype(jnp.float32) @ b_dense.astype(jnp.float32))
 
 

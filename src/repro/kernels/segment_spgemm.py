@@ -12,8 +12,13 @@ in Segment order:
 * folded continuations (``accum_prev``) read-modify-write their C block —
   temporal folding's partial-sum merge.
 
-Grid: ``(n_items,)``; every operand is a single block per step, selected by
-scalar-prefetched index arrays (the ahead-of-time IPM).
+Grid: ``(n_lanes, lane_len // unroll)`` — the lane axis is **parallel**:
+the triple list is cut into load-balanced lanes at C-segment boundaries
+(``repro.core.schedule.partition_lanes``; a C slot never spans lanes), so
+independent output chains run concurrently.  Every operand is selected by
+scalar-prefetched index arrays (the ahead-of-time IPM) directly in original
+BSR storage order; ``unroll`` executes several same-C-slot triples per grid
+step.  ``valid=0`` marks lane-padding no-ops (contribution masked out).
 """
 from __future__ import annotations
 
@@ -25,66 +30,100 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .compat import CompilerParams
+from .segment_spmm import validate_schedule_args
 
 
-def _kernel(a_idx, b_idx, c_idx, seg_start, seg_write, accum_prev,
-            a_blocks, b_blocks, out, acc):
-    i = pl.program_id(0)
+def _make_kernel(lane_len: int, unroll: int, masked: bool):
+    def _kernel(a_idx, b_idx, c_idx, seg_start, seg_write, accum_prev,
+                valid, *refs):
+        a_refs = refs[:unroll]
+        b_refs = refs[unroll:2 * unroll]
+        out = refs[2 * unroll]
+        acc = refs[2 * unroll + 1]
+        base = pl.program_id(0) * lane_len + pl.program_id(1) * unroll
+        for g in range(unroll):
+            i = base + g
 
-    @pl.when(seg_start[i] == 1)
-    def _init():
-        @pl.when(accum_prev[i] == 1)
-        def _load():
-            acc[...] = out[0].astype(jnp.float32)
+            @pl.when(seg_start[i] == 1)
+            def _init(i=i):
+                @pl.when(accum_prev[i] == 1)
+                def _load():
+                    acc[...] = out[0].astype(jnp.float32)
 
-        @pl.when(accum_prev[i] == 0)
-        def _zero():
-            acc[...] = jnp.zeros_like(acc)
+                @pl.when(accum_prev[i] == 0)
+                def _zero():
+                    acc[...] = jnp.zeros_like(acc)
 
-    acc[...] += jax.lax.dot_general(
-        a_blocks[0].astype(jnp.float32), b_blocks[0].astype(jnp.float32),
-        dimension_numbers=(((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+            contrib = jax.lax.dot_general(
+                a_refs[g][0].astype(jnp.float32),
+                b_refs[g][0].astype(jnp.float32),
+                dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            if masked:
+                contrib = jnp.where(valid[i] == 1, contrib, 0.0)
+            acc[...] += contrib
 
-    @pl.when(seg_write[i] == 1)
-    def _write():
-        out[0] = acc[...].astype(out.dtype)
+            @pl.when(seg_write[i] == 1)
+            def _write(i=i):
+                out[0] = acc[...].astype(out.dtype)
+
+    return _kernel
 
 
-@functools.partial(jax.jit, static_argnames=("n_c_blocks", "interpret", "out_dtype"))
+@functools.partial(jax.jit, static_argnames=(
+    "n_c_blocks", "n_lanes", "unroll", "masked", "interpret", "out_dtype"))
 def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
-                   seg_write, accum_prev, *, n_c_blocks: int,
+                   seg_write, accum_prev, valid, *, n_c_blocks: int,
+                   n_lanes: int = 1, unroll: int = 1, masked: bool = True,
                    interpret: bool = False, out_dtype=jnp.float32):
     """Numeric SpGEMM phase.
 
     Args:
       a_blocks: (na, bm, bk) BSR A tiles (original order).
       b_blocks: (nb, bk, bn) BSR B tiles (original order).
-      a_idx/b_idx/c_idx: (n_items,) int32 — triple → block-slot maps.
-      seg_start/seg_write/accum_prev: (n_items,) int32 schedule flags.
+      a_idx/b_idx/c_idx: (n_items,) int32 — triple → block-slot maps,
+        flattened lane-major schedule order.
+      seg_start/seg_write/accum_prev/valid: (n_items,) int32 schedule flags.
       n_c_blocks: number of symbolic C blocks.
+      n_lanes/unroll: lane-parallel grid shape (see module docstring).
     Returns:
       (n_c_blocks, bm, bn) C blocks, ordered as the symbolic pattern.
     """
-    n_items = a_idx.shape[0]
+    n_items = seg_start.shape[0]
     bm, bk = a_blocks.shape[1:]
     bn = b_blocks.shape[2]
+    validate_schedule_args(
+        n_items, n_lanes, unroll,
+        {"a_idx": a_idx, "b_idx": b_idx, "c_idx": c_idx,
+         "seg_write": seg_write, "accum_prev": accum_prev, "valid": valid})
+    lane_len = n_items // n_lanes
+
+    def sel(ref_pick, g):
+        return lambda l, s, ai, bi, ci, st, w, p, v: (
+            ref_pick(ai, bi)[l * lane_len + s * unroll + g], 0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=6,
-        grid=(n_items,),
-        in_specs=[
-            pl.BlockSpec((1, bm, bk), lambda i, ai, bi, ci, s, w, p: (ai[i], 0, 0)),
-            pl.BlockSpec((1, bk, bn), lambda i, ai, bi, ci, s, w, p: (bi[i], 0, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, bm, bn), lambda i, ai, bi, ci, s, w, p: (ci[i], 0, 0)),
+        num_scalar_prefetch=7,
+        grid=(n_lanes, lane_len // unroll),
+        in_specs=(
+            [pl.BlockSpec((1, bm, bk), sel(lambda ai, bi: ai, g))
+             for g in range(unroll)]
+            + [pl.BlockSpec((1, bk, bn), sel(lambda ai, bi: bi, g))
+               for g in range(unroll)]),
+        out_specs=pl.BlockSpec(
+            (1, bm, bn),
+            lambda l, s, ai, bi, ci, st, w, p, v: (
+                ci[l * lane_len + s * unroll], 0, 0)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
     )
+    kernel = _make_kernel(lane_len, unroll, masked)
+    operands = [a_blocks] * unroll + [b_blocks] * unroll
     return pl.pallas_call(
-        _kernel,
+        kernel,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n_c_blocks, bm, bn), out_dtype),
         interpret=interpret,
         compiler_params=CompilerParams(
-            dimension_semantics=("arbitrary",)),
-    )(a_idx, b_idx, c_idx, seg_start, seg_write, accum_prev, a_blocks, b_blocks)
+            dimension_semantics=("parallel", "arbitrary")),
+    )(a_idx, b_idx, c_idx, seg_start, seg_write, accum_prev, valid,
+      *operands)

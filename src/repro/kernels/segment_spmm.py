@@ -1,7 +1,7 @@
 """Segment-scheduled block-sparse × dense matmul (BSR(A) @ B) — Pallas TPU.
 
 The TPU realization of the paper's dynamic dataflow for sparse-weight
-layers.  The kernel runs a **one-dimensional work list** of nonzero A-block
+layers.  The kernel runs a **lane-parallel work list** of nonzero A-block
 multiplies whose *order is the reuse mechanism*: Pallas re-fetches a block
 from HBM only when its ``index_map`` result changes between sequential grid
 steps, so the Segment schedule (``repro.core.schedule.build_spmm_schedule``)
@@ -15,13 +15,25 @@ directly converts schedule locality into HBM-traffic savings:
   with ``accum_prev=1`` and read-modify-write the C tile — the temporal-fold
   partial-sum merge.
 
-Grid: ``(n_tiles_n, n_items)`` — the item axis is innermost so segment
-accumulation is sequential; the N axis is outermost (A blocks are re-fetched
-once per N tile, the cost tiling always pays).
+Grid: ``(n_lanes, n_tiles_n, lane_len // unroll)``.  The lane axis is
+**parallel** — the schedule is cut into load-balanced lanes at segment-chain
+boundaries (``repro.core.schedule.partition_lanes``), so independent output
+chains run concurrently (megacore / multi-core) and the merge network no
+longer degenerates to one PE.  The item axis stays innermost/sequential so
+segment accumulation is ordered; ``unroll`` executes several items per grid
+step (all sharing one output tile, the scheduler guarantees it) to amortize
+grid overhead on small blocks.
+
+A blocks stay in **original BSR storage order**: the scalar-prefetched
+``slot_idx`` addresses each item's tile directly (the IPM analogue — exact
+positions ahead of time), so no schedule-order gather of the block values
+ever happens.  ``transpose_lhs`` contracts along the block's row axis
+instead, computing ``Aᵀ`` tiles from the same storage — the backward pass
+reads the forward weight array with zero copies.
 
 Scalar-prefetch operands (``PrefetchScalarGridSpec``) carry the schedule:
-``m_idx, k_idx, seg_start, seg_write, accum_prev`` (the IPM analogue — exact
-start positions computed ahead of time instead of a stale LUT).
+``slot_idx, m_idx, k_idx, seg_start, seg_write, accum_prev, valid``
+(``valid=0`` marks lane-padding no-ops whose contribution is masked out).
 """
 from __future__ import annotations
 
@@ -35,70 +47,145 @@ from jax.experimental.pallas import tpu as pltpu
 from .compat import CompilerParams
 
 
-def _kernel(m_idx, k_idx, seg_start, seg_write, accum_prev,
-            a_blocks, b, out, acc):
-    i = pl.program_id(1)
+def _make_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
+                 masked: bool):
+    contract = (((0,), (0,)), ((), ())) if transpose_lhs \
+        else (((1,), (0,)), ((), ()))
 
-    @pl.when(seg_start[i] == 1)
-    def _init():
-        @pl.when(accum_prev[i] == 1)
-        def _load():        # folded continuation: merge with prior partial
-            acc[...] = out[...].astype(jnp.float32)
+    def _kernel(slot_idx, m_idx, k_idx, seg_start, seg_write, accum_prev,
+                valid, *refs):
+        a_refs = refs[:unroll]
+        b_refs = refs[unroll:2 * unroll]
+        out = refs[2 * unroll]
+        acc = refs[2 * unroll + 1]
+        base = pl.program_id(0) * lane_len + pl.program_id(2) * unroll
+        for g in range(unroll):
+            i = base + g
 
-        @pl.when(accum_prev[i] == 0)
-        def _zero():
-            acc[...] = jnp.zeros_like(acc)
+            @pl.when(seg_start[i] == 1)
+            def _init(i=i):
+                @pl.when(accum_prev[i] == 1)
+                def _load():    # folded continuation: merge with prior partial
+                    acc[...] = out[...].astype(jnp.float32)
 
-    acc[...] += jax.lax.dot_general(
-        a_blocks[0].astype(jnp.float32), b[...].astype(jnp.float32),
-        dimension_numbers=(((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+                @pl.when(accum_prev[i] == 0)
+                def _zero():
+                    acc[...] = jnp.zeros_like(acc)
 
-    @pl.when(seg_write[i] == 1)
-    def _write():
-        out[...] = acc[...].astype(out.dtype)
+            contrib = jax.lax.dot_general(
+                a_refs[g][0].astype(jnp.float32),
+                b_refs[g][...].astype(jnp.float32),
+                dimension_numbers=contract,
+                preferred_element_type=jnp.float32)
+            if masked:
+                contrib = jnp.where(valid[i] == 1, contrib, 0.0)
+            acc[...] += contrib
+
+            @pl.when(seg_write[i] == 1)
+            def _write(i=i):
+                out[...] = acc[...].astype(out.dtype)
+
+    return _kernel
+
+
+def validate_schedule_args(n_items, n_lanes, unroll, arrays):
+    """Shared scalar-prefetch schedule validation for both Segment kernels."""
+    for name, arr in arrays.items():
+        if arr.shape != (n_items,):
+            raise ValueError(
+                f"{name} has shape {arr.shape}, expected ({n_items},) to "
+                f"match the schedule's n_items (seg_start length)")
+    if n_items % n_lanes != 0:
+        raise ValueError(f"n_items={n_items} is not divisible by "
+                         f"n_lanes={n_lanes}; lanes must be equal length "
+                         f"(pad via partition_lanes)")
+    if (n_items // n_lanes) % unroll != 0:
+        raise ValueError(f"lane length {n_items // n_lanes} is not divisible "
+                         f"by unroll={unroll}")
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("grid_m", "bn", "interpret", "out_dtype"))
-def segment_spmm(a_blocks, m_idx, k_idx, seg_start, seg_write, accum_prev,
-                 b_dense, *, grid_m: int, bn: int = 512,
-                 interpret: bool = False, out_dtype=jnp.float32):
-    """Compute ``C = BSR(A) @ B`` under a Segment schedule.
+    static_argnames=("grid_m", "n_lanes", "bn", "unroll", "transpose_lhs",
+                     "masked", "interpret", "out_dtype"))
+def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
+                 accum_prev, valid, b_dense, *, grid_m: int, n_lanes: int = 1,
+                 bn: int = 512, unroll: int = 1, transpose_lhs: bool = False,
+                 masked: bool = True, interpret: bool = False,
+                 out_dtype=jnp.float32):
+    """Compute ``C = BSR(A) @ B`` (or ``BSR(A)ᵀ @ B``) under a lane-parallel
+    Segment schedule.
 
     Args:
-      a_blocks: (n_items, bm, bk) A tiles **pre-gathered in schedule order**.
-      m_idx/k_idx: (n_items,) int32 block coordinates, schedule order.
-      seg_start/seg_write/accum_prev: (n_items,) int32 schedule flags.
-      b_dense: (K, N) dense right-hand side; K = grid_k * bk.
-      grid_m: number of output block rows (M = grid_m * bm).
-      bn: N-tile width (VMEM working set: bm*bn + bk*bn + bm*bk floats).
+      a_blocks: (n_blocks, bm, bk) A tiles in **original BSR storage order**.
+      slot_idx: (n_items,) int32 — per-item index into ``a_blocks``.
+      m_idx/k_idx: (n_items,) int32 output/contraction block coordinates,
+        flattened lane-major schedule order.
+      seg_start/seg_write/accum_prev/valid: (n_items,) int32 schedule flags
+        (``valid=0`` on lane-padding no-ops).
+      b_dense: (K, N) dense right-hand side; K = grid_k * bk (bm when
+        ``transpose_lhs``).
+      grid_m: number of output block rows.
+      n_lanes: parallel lanes; ``n_items`` must be ``n_lanes * lane_len``.
+      bn: N-tile width (VMEM working set: row·bn + contract·bn + bm·bk).
+      unroll: items executed per grid step (scheduler must have aligned
+        segment chains to ``unroll``).
+      transpose_lhs: contract along each A tile's row axis (``Aᵀ @ B``) —
+        the backward pass reads forward storage directly.
+      masked: skip the validity mask when the schedule has no pads.
     Returns:
-      (grid_m * bm, N) dense output.
+      (grid_m * row_block, N) dense output.
     """
-    n_items, bm, bk = a_blocks.shape
+    _, bm, bk = a_blocks.shape
+    row_blk, contract_blk = (bk, bm) if transpose_lhs else (bm, bk)
     k_dim, n_dim = b_dense.shape
-    assert n_dim % bn == 0, (n_dim, bn)
+    if k_dim % contract_blk != 0:
+        raise ValueError(f"rhs K={k_dim} is not a multiple of the "
+                         f"contraction block {contract_blk} "
+                         f"(a_blocks {a_blocks.shape}, "
+                         f"transpose_lhs={transpose_lhs})")
+    if n_dim % bn != 0:
+        raise ValueError(
+            f"dense rhs width N={n_dim} (b_dense shape {b_dense.shape}) is "
+            f"not divisible by the N-tile width bn={bn}; pad N or pick a "
+            f"divisor (see repro.api.pick_bn)")
+    validate_schedule_args(
+        seg_start.shape[0], n_lanes, unroll,
+        {"slot_idx": slot_idx, "m_idx": m_idx, "k_idx": k_idx,
+         "seg_write": seg_write, "accum_prev": accum_prev, "valid": valid})
+    n_items = seg_start.shape[0]
+    lane_len = n_items // n_lanes
     n_tiles_n = n_dim // bn
 
+    def a_map(g):
+        return lambda l, j, s, slot, m, k, st, w, p, v: (
+            slot[l * lane_len + s * unroll + g], 0, 0)
+
+    def b_map(g):
+        return lambda l, j, s, slot, m, k, st, w, p, v: (
+            k[l * lane_len + s * unroll + g], j)
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=5,
-        grid=(n_tiles_n, n_items),
-        in_specs=[
-            # A tile for item i (already schedule-ordered)
-            pl.BlockSpec((1, bm, bk), lambda j, i, m, k, s, w, p: (i, 0, 0)),
-            # B row-block k_idx[i], N-tile j
-            pl.BlockSpec((bk, bn), lambda j, i, m, k, s, w, p: (k[i], j)),
-        ],
-        out_specs=pl.BlockSpec((bm, bn), lambda j, i, m, k, s, w, p: (m[i], j)),
-        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        num_scalar_prefetch=7,
+        grid=(n_lanes, n_tiles_n, lane_len // unroll),
+        in_specs=(
+            [pl.BlockSpec((1, bm, bk), a_map(g)) for g in range(unroll)]
+            + [pl.BlockSpec((contract_blk, bn), b_map(g))
+               for g in range(unroll)]),
+        out_specs=pl.BlockSpec(
+            (row_blk, bn),
+            lambda l, j, s, slot, m, k, st, w, p, v: (
+                m[l * lane_len + s * unroll], j)),
+        scratch_shapes=[pltpu.VMEM((row_blk, bn), jnp.float32)],
     )
+    kernel = _make_kernel(lane_len, unroll, transpose_lhs, masked)
+    operands = [a_blocks] * unroll + [b_dense] * unroll
     return pl.pallas_call(
-        _kernel,
+        kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((grid_m * bm, n_dim), out_dtype),
+        out_shape=jax.ShapeDtypeStruct((grid_m * row_blk, n_dim), out_dtype),
         interpret=interpret,
         compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
-    )(m_idx, k_idx, seg_start, seg_write, accum_prev, a_blocks, b_dense)
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(slot_idx, m_idx, k_idx, seg_start, seg_write, accum_prev, valid,
+      *operands)

@@ -46,7 +46,8 @@ def sparse_dense_init(key, d_in, d_out, *, block=64, density=0.25,
 
     Returns ``(plan, params)``: the static :class:`~repro.api.SegmentPlan`
     (pass it to :func:`sparse_dense_apply`; it is a pytree, safe to close
-    over or thread through jit) and the trainable schedule-ordered blocks.
+    over or thread through jit) and the trainable blocks in the plan's
+    storage layout (original BSR block order).
 
     Both dims must be multiples of ``block`` — the Segment grid is exact,
     so a ragged edge would silently widen the output with untrained

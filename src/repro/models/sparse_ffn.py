@@ -4,7 +4,7 @@ Weights are stored block-sparse (BSR) and driven entirely through
 :mod:`repro.api`: the layer holds a :class:`~repro.api.SegmentPlan` built
 with ``with_grad=True`` (so the plan carries the transposed schedule for the
 backward pass) and the trainable parameters are the plan's block values in
-schedule order.  Forward and backward both run through
+original BSR storage order.  Forward and backward both run through
 :func:`repro.api.apply_plan` — the one ``custom_vjp`` shared with serving:
 
 * ``dx = Wᵀ @ dy``  — another Segment SpMM under the transposed schedule
@@ -50,9 +50,10 @@ class SparseLinear:
                        dtype=np.float32)
         plan = plan_matmul(w, policy=policy, with_grad=True)
         layer = SparseLinear(plan=plan, d_out=d_out, d_in=d_in)
-        # trainable values live in the params dict, in schedule order (the
-        # plan's storage layout); the plan copy keeps the init values only
-        # as a template.
+        # trainable values live in the params dict, in original BSR block
+        # order (the plan's storage layout — ``plan.a_brow``/``a_bcol`` give
+        # each block's coordinates); the plan copy keeps the init values
+        # only as a template.
         params = {"blocks": plan.lhs_blocks.astype(dtype)}
         return layer, params
 

@@ -36,7 +36,7 @@ def _sparse_mlp_params(key, sm: SparseMLP, dtype):
     """Fresh trainable blocks for the *shared* sparse schedule (all layers
     prune to the same block pattern; only values differ)."""
     def pb(k, lin):
-        n = lin.plan.n_items
+        n = lin.plan.n_blocks
         bm, bk = lin.plan.block_shape
         return {"blocks": jax.random.normal(k, (n, bm, bk), dtype)
                 / np.sqrt(lin.d_in)}

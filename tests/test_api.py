@@ -242,6 +242,18 @@ def test_plan_cache_hits_and_fresh_values():
     assert api.plan_cache_stats()["size"] == 0
 
 
+def test_plan_cache_counts_uncached_builds_as_misses():
+    """Bench runs with cache=False must still report honest miss counts —
+    every template build is a miss whether or not the entry is kept."""
+    api.clear_plan_cache()
+    a = BSR.random(np.random.default_rng(13), (64, 64), (32, 32), 0.9)
+    api.plan_matmul(a, cache=False)
+    api.plan_matmul(a, cache=False)
+    s = api.plan_cache_stats()
+    assert s["misses"] == 2 and s["hits"] == 0 and s["size"] == 0
+    api.clear_plan_cache()
+
+
 def test_plan_cache_shared_across_dense_widths():
     """The dense-N hint prices the traffic estimate but never the schedule:
     plans for the same pattern at different N share one cache entry."""
@@ -279,11 +291,11 @@ def test_apply_plan_grads_match_dense(backend):
         lambda w_, xx: jnp.sum((w_ @ xx) ** 2), argnums=(0, 1))(w, x)
     np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_d),
                                rtol=1e-3, atol=1e-3)
-    m_idx, k_idx = np.asarray(plan.m_idx), np.asarray(plan.k_idx)
+    brow, bcol = np.asarray(plan.a_brow), np.asarray(plan.a_bcol)
     gwn = np.asarray(gw)
     gbn = np.asarray(gb)
-    for j in range(plan.n_items):
-        r, c = int(m_idx[j]), int(k_idx[j])
+    for j in range(plan.n_blocks):
+        r, c = int(brow[j]), int(bcol[j])
         np.testing.assert_allclose(
             gbn[j], gwn[r * 32:(r + 1) * 32, c * 32:(c + 1) * 32],
             rtol=1e-3, atol=1e-3)

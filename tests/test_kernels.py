@@ -57,6 +57,7 @@ def test_spgemm_vs_oracle(policy):
     (2, 128, 128, 4, 2, 64, True, None),
     (1, 64, 256, 4, 1, 64, True, None),
     (2, 128, 128, 4, 4, 64, True, 64),
+    (2, 128, 128, 4, 2, 64, True, 64),      # GQA × window (q_period wrap)
     (1, 1, 96, 8, 2, 64, True, None),       # decode shape
     (2, 48, 48, 2, 2, 32, False, None),     # bidirectional, ragged sizes
     (1, 32, 512, 2, 2, 128, True, 128),     # long kv + window

@@ -1,0 +1,207 @@
+"""Lane-parallel Segment execution: partitioning invariants, backend parity
+across lane counts, the zero-copy realize contract, and the transposed
+backward path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st  # optional-dep guard
+
+from repro import api
+from repro.api import planner
+from repro.core.formats import BSR
+from repro.core.schedule import build_spmm_schedule, partition_lanes
+
+RNG = np.random.default_rng(0)
+
+
+def _patterns():
+    """Pattern classes the lane partitioner must not corrupt."""
+    rand = BSR.random(np.random.default_rng(1), (128, 160), (32, 32), 0.35)
+    # empty block rows
+    d = np.random.default_rng(2).standard_normal((128, 96)).astype(np.float32)
+    d[0:32] = 0.0
+    d[64:96] = 0.0
+    holes = BSR.from_dense(d, (32, 32))
+    # one giant segment: a single output row holding every k block — with
+    # n_lanes > 1 the whole chain must stay in one lane (extra lanes clamp)
+    one_row = BSR.from_dense(
+        np.random.default_rng(3).standard_normal((32, 256)).astype(np.float32),
+        (32, 32))
+    return {"random": rand, "empty_rows": holes, "one_segment": one_row}
+
+
+# ---------------------------------------------------------------------------
+# partition_lanes invariants
+# ---------------------------------------------------------------------------
+
+
+def test_partition_lanes_covers_items_and_keeps_owners_atomic():
+    a = BSR.random(np.random.default_rng(4), (256, 256), (32, 32), 0.3)
+    s = build_spmm_schedule(a, "segment", fold_len=3)
+    for n_lanes in (1, 2, 4, 8):
+        lay = partition_lanes(s.m, n_lanes, unroll=2)
+        real = lay.perm[lay.perm >= 0]
+        assert sorted(real.tolist()) == list(range(s.n_items))
+        # owner chains (incl. folded continuations) never span lanes
+        owner_lane = {}
+        for li in range(lay.n_lanes):
+            for it in lay.perm[li][lay.perm[li] >= 0]:
+                o = int(s.m[it])
+                assert owner_lane.setdefault(o, li) == li
+        # unroll alignment: every grid step's items share one owner
+        for li in range(lay.n_lanes):
+            owners = np.where(lay.perm[li] >= 0,
+                              s.m[lay.filled[li]], -1)
+            for j0 in range(0, lay.lane_len, 2):
+                step = [o for o in owners[j0:j0 + 2] if o >= 0]
+                assert len(set(step)) <= 1
+
+
+def test_partition_lanes_clamps_to_segment_count():
+    lay = partition_lanes(np.array([7, 7, 7, 7]), 4)
+    assert lay.n_lanes == 1          # one owner group → one lane
+    lay = partition_lanes(np.array([0, 0, 1, 2]), 16)
+    assert lay.n_lanes == 3
+
+
+def test_lane_traffic_accounts_boundary_breaks():
+    """Cutting the schedule into lanes re-fetches B at every lane start —
+    modeled traffic must not claim cross-lane boundary reuse."""
+    a = BSR.random(np.random.default_rng(5), (512, 512), (64, 64), 0.25)
+    t1 = api.plan_matmul(a, n_cols_hint=256, n_lanes=1).traffic
+    t4 = api.plan_matmul(a, n_cols_hint=256, n_lanes=4).traffic
+    assert t4["b_fetches"] >= t1["b_fetches"]
+    assert t4["total"] >= t1["total"]
+    assert t4["imbalance"] >= 1.0
+
+
+# ---------------------------------------------------------------------------
+# numeric parity across lane counts / folding / backends
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("n_lanes", [1, 2, 4])
+@pytest.mark.parametrize("fold_len", [None, 2])
+def test_lane_parity_vs_dense_oracle(n_lanes, fold_len):
+    for name, a in _patterns().items():
+        plan = api.plan_matmul(a, policy="segment", n_lanes=n_lanes,
+                               fold_len=fold_len)
+        x = jnp.asarray(
+            RNG.standard_normal((a.shape[1], 64)).astype(np.float32))
+        want = a.to_dense() @ np.asarray(x)
+        got = np.asarray(plan(x, bn=32, backend="interpret"))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4,
+                                   err_msg=f"{name}/lanes={n_lanes}")
+        got_ref = np.asarray(plan(x, backend="reference"))
+        np.testing.assert_allclose(got_ref, want, rtol=1e-4, atol=1e-4)
+
+
+def test_unroll_parity():
+    a = _patterns()["random"]
+    x = jnp.asarray(RNG.standard_normal((a.shape[1], 64)).astype(np.float32))
+    want = a.to_dense() @ np.asarray(x)
+    plan = api.plan_matmul(a, n_lanes=2, unroll=2, fold_len=3)
+    assert plan.unroll == 2 and plan.n_items % (2 * plan.n_lanes) == 0
+    got = np.asarray(plan(x, bn=32, backend="interpret"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_spgemm_lane_parity():
+    a = BSR.random(np.random.default_rng(6), (128, 160), (32, 32), 0.3)
+    b = BSR.random(np.random.default_rng(7), (160, 96), (32, 32), 0.3)
+    want = a.to_dense() @ b.to_dense()
+    for n_lanes in (1, 3):
+        plan = api.plan_matmul(a, b, n_lanes=n_lanes)
+        got = np.asarray(plan(backend="interpret"))
+        for i, (r, c) in enumerate(zip(plan.c_brow, plan.c_bcol)):
+            np.testing.assert_allclose(
+                got[i], want[r * 32:(r + 1) * 32, c * 32:(c + 1) * 32],
+                rtol=1e-4, atol=1e-4, err_msg=f"lanes={n_lanes}")
+
+
+@pytest.mark.parametrize("backend", ["interpret", "reference"])
+def test_lane_vjp_matches_dense(backend):
+    a = BSR.random(np.random.default_rng(8), (96, 128), (32, 32), 0.4)
+    plan = api.plan_matmul(a, with_grad=True, n_lanes=2)
+    assert plan.grad_plan.transpose_lhs
+    x = jnp.asarray(RNG.standard_normal((128, 48)).astype(np.float32))
+
+    def loss(blocks, xx):
+        return jnp.sum(api.apply_plan(plan.with_values(blocks), xx,
+                                      backend=backend) ** 2)
+
+    gb, gx = jax.grad(loss, argnums=(0, 1))(plan.lhs_blocks, x)
+    w = jnp.asarray(a.to_dense())
+    gw, gx_d = jax.grad(
+        lambda w_, xx: jnp.sum((w_ @ xx) ** 2), argnums=(0, 1))(w, x)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_d),
+                               rtol=1e-3, atol=1e-3)
+    brow, bcol = np.asarray(plan.a_brow), np.asarray(plan.a_bcol)
+    for s in range(plan.n_blocks):
+        r, c = int(brow[s]), int(bcol[s])
+        np.testing.assert_allclose(
+            np.asarray(gb)[s],
+            np.asarray(gw)[r * 32:(r + 1) * 32, c * 32:(c + 1) * 32],
+            rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# zero-copy realize (the killed O(nnz) gather)
+# ---------------------------------------------------------------------------
+
+
+def test_realize_does_not_copy_blocks():
+    """Realizing a plan hands the caller's block buffer through untouched —
+    no schedule-order gather of the values, forward or backward."""
+    a = BSR.random(np.random.default_rng(9), (128, 128), (32, 32), 0.4)
+    a_dev = BSR(a.shape, a.block_shape, a.brow, a.bcol,
+                jnp.asarray(a.blocks))
+    plan = api.plan_matmul(a_dev, with_grad=True, cache=False)
+    assert plan.lhs_blocks is a_dev.blocks          # same device buffer
+    # the template carries no permutation to apply at realize time
+    field_names = {f.name for f in dataclasses.fields(planner._PlanTemplate)}
+    assert "fwd_perm" not in field_names
+    # the backward plan addresses the same storage via slot_idx + transpose
+    g = plan.grad_plan
+    assert g.lhs_blocks is None and g.transpose_lhs
+    slot = np.asarray(g.slot_idx)[np.asarray(g.valid) == 1]
+    assert sorted(set(slot.tolist())) == list(range(a.nblocks))
+
+
+def test_schedule_indexes_storage_through_slot_idx():
+    a = BSR.random(np.random.default_rng(10), (128, 160), (32, 32), 0.35)
+    plan = api.plan_matmul(a, n_lanes=2)
+    slot = np.asarray(plan.slot_idx)
+    valid = np.asarray(plan.valid).astype(bool)
+    m_idx, k_idx = np.asarray(plan.m_idx), np.asarray(plan.k_idx)
+    # every valid item addresses the stored block with its coordinates
+    np.testing.assert_array_equal(np.asarray(plan.a_brow)[slot[valid]],
+                                  m_idx[valid])
+    np.testing.assert_array_equal(np.asarray(plan.a_bcol)[slot[valid]],
+                                  k_idx[valid])
+
+
+# ---------------------------------------------------------------------------
+# property test: pattern × lanes × fold × backend ≡ dense oracle
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=12)
+@given(seed=st.integers(0, 10_000), gm=st.integers(1, 6),
+       gk=st.integers(1, 6), density=st.floats(0.1, 1.0),
+       n_lanes=st.sampled_from([1, 2, 4]),
+       fold_len=st.sampled_from([None, 2]))
+def test_lane_property_vs_dense(seed, gm, gk, density, n_lanes, fold_len):
+    rng = np.random.default_rng(seed)
+    a = BSR.random(rng, (gm * 16, gk * 16), (16, 16), density)
+    x = rng.standard_normal((gk * 16, 32)).astype(np.float32)
+    plan = api.plan_matmul(a, policy="segment", n_lanes=n_lanes,
+                           fold_len=fold_len)
+    want = a.to_dense() @ x
+    got = np.asarray(plan(jnp.asarray(x), bn=32, backend="interpret"))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+    got_ref = np.asarray(plan(jnp.asarray(x), backend="reference"))
+    np.testing.assert_allclose(got_ref, want, rtol=1e-4, atol=1e-4)

@@ -1,8 +1,9 @@
 """Segment SpMM layer: forward + custom VJP vs dense-masked autodiff oracle.
 
 The layer is backed by ``repro.api``: its plan is a pytree and the trainable
-blocks live in the params dict in schedule order (``plan.m_idx``/``k_idx``
-give each block's coordinates directly — no perm indirection).
+blocks live in the params dict in original BSR storage order
+(``plan.a_brow``/``a_bcol`` give each stored block's coordinates directly —
+the schedule addresses them through ``slot_idx``, never by reordering).
 """
 import jax
 import jax.numpy as jnp
@@ -12,15 +13,15 @@ from repro.models.sparse_ffn import SparseLinear, SparseMLP
 
 
 def _dense_of(layer, params):
-    """Reassemble the dense weight from the schedule-ordered blocks."""
+    """Reassemble the dense weight from the storage-ordered blocks."""
     p = layer.plan
     bm, bk = p.block_shape
     gm, gk = p.grid
     w = np.zeros((gm * bm, gk * bk), np.float32)
     blocks = np.asarray(params["blocks"], np.float32)
-    m_idx, k_idx = np.asarray(p.m_idx), np.asarray(p.k_idx)
-    for j in range(p.n_items):
-        r, c = int(m_idx[j]), int(k_idx[j])
+    brow, bcol = np.asarray(p.a_brow), np.asarray(p.a_bcol)
+    for j in range(p.n_blocks):
+        r, c = int(brow[j]), int(bcol[j])
         w[r * bm:(r + 1) * bm, c * bk:(c + 1) * bk] = blocks[j]
     return w[: layer.d_out, : layer.d_in]
 
@@ -55,11 +56,11 @@ def test_sparse_linear_grads_vs_dense_masked():
                                rtol=1e-3, atol=1e-3)
     # block grads must equal the dense grad restricted to the block pattern
     p = layer.plan
-    m_idx, k_idx = np.asarray(p.m_idx), np.asarray(p.k_idx)
+    brow, bcol = np.asarray(p.a_brow), np.asarray(p.a_bcol)
     gw = np.asarray(gw_dense)
     gb = np.asarray(gp["blocks"])
-    for j in range(p.n_items):
-        r, c = int(m_idx[j]), int(k_idx[j])
+    for j in range(p.n_blocks):
+        r, c = int(brow[j]), int(bcol[j])
         np.testing.assert_allclose(
             gb[j], gw[r * 32:(r + 1) * 32, c * 32:(c + 1) * 32],
             rtol=1e-3, atol=1e-3)
