@@ -11,7 +11,9 @@ so newly registered dataflows show up in the sweep without editing this file.
 The lane sweep runs the 512×512 SpMM case at 1/2/4 lanes and reports
 interpret-mode wall time (median of ``--repeats`` interleaved warm calls),
 max error vs the dense oracle, modeled HBM traffic, and the LPT load
-imbalance.
+imbalance.  The quant sweep runs the standard weight-bound case at
+fp32/int8/fp8 block storage and reports traffic-bytes ratios vs fp32 plus
+normalized max error vs the dense fp32 oracle (CI gates both).
 """
 from __future__ import annotations
 
@@ -31,6 +33,13 @@ from .common import Csv
 LANE_CASE = dict(shape=(512, 512), block=(64, 64), blocks_per_row=2,
                  n_cols=256, bn=128)
 LANES = (1, 2, 4)
+
+# Standard quantization case: a weight-bound SpMM (decode-like narrow rhs)
+# where A-tile bytes dominate the modeled traffic — the configuration
+# quantized block storage targets.
+QUANT_CASE = dict(shape=(1024, 2048), block=(128, 128), density=0.25,
+                  n_cols=32, bn=32)
+QUANT_MODES = ("fp32", "int8", "fp8")
 
 
 def traffic_sweep() -> dict:
@@ -117,6 +126,41 @@ def lane_sweep(repeats: int = 12) -> dict:
     return out
 
 
+def quant_sweep() -> dict:
+    """Quantized block storage: traffic bytes + dense-fp32-oracle parity.
+
+    Runs the standard quant case (``QUANT_CASE``) at fp32 / int8 / fp8
+    block storage and reports the modeled HBM traffic (quantized payload +
+    per-block scales vs fp32 tiles) and ``max_err`` — the max absolute
+    deviation from the dense fp32 oracle, normalized by the oracle's max
+    magnitude (so the bound is scale-free and K-independent enough to gate
+    in CI; see docs/API.md for the documented bounds).
+    """
+    rng = np.random.default_rng(3)
+    m, k = QUANT_CASE["shape"]
+    a = BSR.random(rng, (m, k), QUANT_CASE["block"], QUANT_CASE["density"])
+    x = jnp.asarray(rng.standard_normal(
+        (k, QUANT_CASE["n_cols"])).astype(np.float32))
+    want = a.to_dense() @ np.asarray(x)
+    norm = float(np.abs(want).max())
+    out = {}
+    for mode in QUANT_MODES:
+        plan = api.plan_matmul(a, x.shape,
+                               quantize=None if mode == "fp32" else mode)
+        got = np.asarray(plan(x, bn=QUANT_CASE["bn"], backend="interpret"))
+        tr = plan.traffic
+        out[mode] = {
+            "traffic_total_bytes": tr["total"],
+            "a_bytes": tr["a_bytes"],
+            "max_err": float(np.abs(got - want).max() / norm),
+        }
+    for mode in QUANT_MODES[1:]:
+        out[mode]["traffic_ratio_vs_fp32"] = (
+            out["fp32"]["traffic_total_bytes"]
+            / out[mode]["traffic_total_bytes"])
+    return out
+
+
 def run(csv: Csv) -> dict:
     """CSV entry point for ``benchmarks.run`` (the figure-suite driver)."""
     ratios = traffic_sweep()
@@ -128,7 +172,11 @@ def run(csv: Csv) -> dict:
         csv.add(f"kernel/spmm_interpret_512_lanes{n}", row["interpret_us"],
                 f"max_err={row['max_err']:.2e};"
                 f"imbalance={row['lane_imbalance']:.3f}")
-    return {"traffic": ratios, "lanes": lanes}
+    quant = quant_sweep()
+    for mode, row in quant.items():
+        csv.add(f"kernel/spmm_quant_{mode}", row["traffic_total_bytes"],
+                f"max_err={row['max_err']:.2e}")
+    return {"traffic": ratios, "lanes": lanes, "quant": quant}
 
 
 def main() -> None:
@@ -138,11 +186,14 @@ def main() -> None:
     args = ap.parse_args()
 
     result = {"traffic": traffic_sweep(), "lanes": lane_sweep(args.repeats),
+              "quant": quant_sweep(),
               "lane_case": {k: str(v) for k, v in LANE_CASE.items()},
+              "quant_case": {k: str(v) for k, v in QUANT_CASE.items()},
               "plan_cache": api.plan_cache_stats()}
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(json.dumps(result["lanes"], indent=2))
+    print(json.dumps(result["quant"], indent=2))
     print(f"wrote {args.out}")
 
 

@@ -72,9 +72,22 @@ for case, ratios in d["traffic"].items():
     for p in ("gustavson", "outer"):
         r = ratios[f"segment_traffic_saving_vs_{p}"]
         assert r >= 0.999, (case, p, r)
+# quantized block storage: the standard weight-bound case must cut modeled
+# traffic bytes (int8 payload + per-block scales vs fp32 tiles) by >= 1.67x
+# (<= 0.6x fp32) and stay under the documented normalized error bounds
+# (docs/API.md: int8 5e-2, fp8 1e-1 vs the dense fp32 oracle)
+q = d["quant"]
+for mode in ("int8", "fp8"):
+    assert q[mode]["traffic_total_bytes"] <= 0.6 * q["fp32"]["traffic_total_bytes"], \
+        (mode, q[mode]["traffic_total_bytes"], q["fp32"]["traffic_total_bytes"])
+assert q["fp32"]["max_err"] < 1e-4, q["fp32"]
+assert q["int8"]["max_err"] < 5e-2, q["int8"]
+assert q["fp8"]["max_err"] < 1e-1, q["fp8"]
 print(f"kernel bench OK: interpret 1-lane {single:.0f}us, "
       f"best multi-lane {multi:.0f}us, "
-      f"max_err {max(r['max_err'] for r in lanes.values()):.2e}")
+      f"max_err {max(r['max_err'] for r in lanes.values()):.2e}, "
+      f"int8 traffic {q['int8']['traffic_ratio_vs_fp32']:.2f}x smaller "
+      f"(err {q['int8']['max_err']:.2e})")
 EOF
 
 echo "== tier-1 tests =="

@@ -18,6 +18,9 @@ See ``docs/API.md`` for the full plan lifecycle, the policy registry
 contract, and the deprecation shims (``repro.kernels.ops.plan_spmm`` /
 ``plan_spgemm`` now delegate here).
 """
+from repro.core.formats import (QUANT_DTYPES, QuantizedBlocks,
+                                dequantize_blocks, quant_error_bound,
+                                quantize_blocks)
 from repro.core.policies import (SchedulePolicy, available_policies,
                                  get_policy, register_policy,
                                  unregister_policy)
@@ -34,6 +37,9 @@ __all__ = [
     "SegmentPlan", "SPMM", "SPGEMM",
     "plan_matmul", "execute_plan", "apply_plan", "pick_bn",
     "clear_plan_cache", "plan_cache_stats", "pattern_fingerprint",
+    # quantized block storage
+    "QUANT_DTYPES", "QuantizedBlocks", "quantize_blocks",
+    "dequantize_blocks", "quant_error_bound",
     # policy registry
     "SchedulePolicy", "register_policy", "unregister_policy", "get_policy",
     "available_policies",

@@ -63,15 +63,20 @@ def _mask_dead_rows(plan: SegmentPlan, out: jax.Array) -> jax.Array:
 
 
 def _run_spmm(plan: SegmentPlan, x: jax.Array, *, backend: str,
-              blocks: Optional[jax.Array] = None, bn: int = 512,
+              blocks: Optional[jax.Array] = None,
+              scales: Optional[jax.Array] = None, bn: int = 512,
               out_dtype=jnp.float32) -> jax.Array:
     """Execute an spmm plan (optionally with substituted block values).
 
     ``blocks`` are always the *stored* tiles (original BSR order); a
     ``transpose_lhs`` plan (the nested backward schedule) contracts along
-    their row axis instead of copying a transposed array.
+    their row axis instead of copying a transposed array.  ``scales`` are
+    the per-block dequantization factors when ``blocks`` is a quantized
+    payload (the nested backward plan carries none of its own — the caller
+    threads the forward plan's).
     """
     blocks = plan.lhs_blocks if blocks is None else blocks
+    scales = plan.lhs_scales if scales is None else scales
     gm, gk = plan.grid
     bm, bk = blocks.shape[1], blocks.shape[2]
     contract_blk = bm if plan.transpose_lhs else bk
@@ -84,9 +89,10 @@ def _run_spmm(plan: SegmentPlan, x: jax.Array, *, backend: str,
             # plan's grid reversed.
             out = ref.spmm_ref(blocks, plan.a_brow, plan.a_bcol,
                                plan.grid[1], plan.grid[0], x,
-                               transpose_lhs=True)
+                               transpose_lhs=True, scales=scales)
         else:
-            out = ref.spmm_ref(blocks, plan.a_brow, plan.a_bcol, gm, gk, x)
+            out = ref.spmm_ref(blocks, plan.a_brow, plan.a_bcol, gm, gk, x,
+                               scales=scales)
         return out.astype(out_dtype)
     n = x.shape[1]
     bn_eff, pad = pick_bn(n, bn)
@@ -97,7 +103,8 @@ def _run_spmm(plan: SegmentPlan, x: jax.Array, *, backend: str,
         n_lanes=plan.n_lanes, bn=bn_eff, unroll=plan.unroll,
         transpose_lhs=plan.transpose_lhs,
         masked=(plan.n_lanes > 1 or plan.unroll > 1),
-        interpret=backend_interpret_flag(backend), out_dtype=out_dtype)
+        interpret=backend_interpret_flag(backend), out_dtype=out_dtype,
+        a_scales=scales)
     if pad:
         out = out[:, :n]
     return _mask_dead_rows(plan, out)
@@ -105,11 +112,18 @@ def _run_spmm(plan: SegmentPlan, x: jax.Array, *, backend: str,
 
 def _run_spgemm(plan: SegmentPlan, *, backend: str,
                 out_dtype=jnp.float32) -> jax.Array:
+    if plan.n_out_blocks == 0:
+        # all-masked symbolic pattern (no A column meets a B row): the grid
+        # would be empty — return the empty C block array directly.
+        bm = plan.block_shape[0]
+        bn = plan.rhs_blocks.shape[2]
+        return jnp.zeros((0, bm, bn), out_dtype)
     if backend == "reference":
         out = ref.spgemm_ref(
             plan.lhs_blocks, plan.a_brow, plan.a_bcol, plan.grid,
             plan.rhs_blocks, plan.b_brow, plan.b_bcol, plan.rhs_grid,
-            plan.c_brow_arr, plan.c_bcol_arr)
+            plan.c_brow_arr, plan.c_bcol_arr,
+            a_scales=plan.lhs_scales, b_scales=plan.rhs_scales)
         return out.astype(out_dtype)
     return segment_spgemm(
         plan.lhs_blocks, plan.rhs_blocks, plan.a_idx, plan.b_idx, plan.c_idx,
@@ -117,7 +131,8 @@ def _run_spgemm(plan: SegmentPlan, *, backend: str,
         n_c_blocks=plan.n_out_blocks, n_lanes=plan.n_lanes,
         unroll=plan.unroll,
         masked=(plan.n_lanes > 1 or plan.unroll > 1),
-        interpret=backend_interpret_flag(backend), out_dtype=out_dtype)
+        interpret=backend_interpret_flag(backend), out_dtype=out_dtype,
+        a_scales=plan.lhs_scales, b_scales=plan.rhs_scales)
 
 
 def execute_plan(plan: SegmentPlan, rhs=None, *, bn: int = 512,
@@ -126,9 +141,15 @@ def execute_plan(plan: SegmentPlan, rhs=None, *, bn: int = 512,
 
     Backend resolution order: explicit argument > ``plan.backend`` > the
     process default (:func:`repro.api.backends.default_backend`).
+    ``out_dtype`` resolves the same way: explicit argument >
+    ``plan.out_dtype`` (set via ``plan_matmul(..., out_dtype=...)``) >
+    float32.  Accumulation is always fp32; the dtype only affects the
+    written output tiles.
     """
     backend = resolve_backend(backend if backend is not None else plan.backend)
-    out_dtype = jnp.float32 if out_dtype is None else out_dtype
+    if out_dtype is None:
+        out_dtype = plan.out_dtype
+    out_dtype = jnp.float32 if out_dtype is None else jnp.dtype(out_dtype)
     if plan.kind == SPMM:
         if rhs is None:
             raise ValueError("spmm plan needs a dense right-hand side")
@@ -174,20 +195,25 @@ def _apply_bwd(backend, bn, res, dy):
                          "pass — rebuild via plan_matmul(..., with_grad=True)")
     dyf = dy.astype(jnp.float32)
     # dx = Wᵀ @ dy under the transposed schedule; the grad plan's slot_idx
-    # addresses the forward weight storage and the kernel contracts along
-    # block rows (transpose_lhs) — zero copies of W.
-    dx = _run_spmm(g, dyf, backend=backend, blocks=plan.lhs_blocks, bn=bn,
+    # addresses the forward weight storage (payload + scales for quantized
+    # plans) and the kernel contracts along block rows (transpose_lhs) —
+    # zero copies of W.
+    dx = _run_spmm(g, dyf, backend=backend, blocks=plan.lhs_blocks,
+                   scales=plan.lhs_scales, bn=bn,
                    out_dtype=jnp.float32).astype(x.dtype)
-    # dW[s] = dy[brow_s·bm:(brow_s+1)·bm] @ x[bcol_s·bk:(bcol_s+1)·bk]ᵀ —
-    # block SDDMM, emitted directly in the plan's (original BSR) storage
-    # order via the stored block coordinates.
-    bm, bk = plan.block_shape
-    gm, gk = plan.grid
-    dyb = dyf.reshape(gm, bm, -1)
-    xb = x.astype(jnp.float32).reshape(gk, bk, -1)
-    dW = jnp.einsum("imn,ikn->imk", dyb[plan.a_brow], xb[plan.a_bcol])
     dplan = _zero_cotangent(plan)
-    dplan = dplan.replace(lhs_blocks=dW.astype(plan.lhs_blocks.dtype))
+    if not plan.quantized:
+        # dW[s] = dy[brow_s·bm:(brow_s+1)·bm] @ x[bcol_s·bk:(bcol_s+1)·bk]ᵀ —
+        # block SDDMM, emitted directly in the plan's (original BSR) storage
+        # order via the stored block coordinates.  Quantized payloads are
+        # frozen inference storage: their cotangent stays the symbolic zero
+        # (float0 for int8) — gradients still flow to x.
+        bm, bk = plan.block_shape
+        gm, gk = plan.grid
+        dyb = dyf.reshape(gm, bm, -1)
+        xb = x.astype(jnp.float32).reshape(gk, bk, -1)
+        dW = jnp.einsum("imn,ikn->imk", dyb[plan.a_brow], xb[plan.a_bcol])
+        dplan = dplan.replace(lhs_blocks=dW.astype(plan.lhs_blocks.dtype))
     return dplan, dx
 
 

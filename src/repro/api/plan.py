@@ -2,10 +2,12 @@
 
 A plan freezes everything a Segment-dataflow matmul needs at run time:
 
-* **leaves** (device arrays): the block values, the scalar-prefetch schedule
-  arrays (``seg_start``/``seg_write``/``accum_prev``), per-item block
-  coordinates, the row liveness mask, and — when the plan was built with
-  ``with_grad=True`` — a nested backward plan for the transposed schedule;
+* **leaves** (device arrays): the block values (fp32, or a quantized
+  payload plus per-block fp32 ``lhs_scales``/``rhs_scales``), the
+  scalar-prefetch schedule arrays (``seg_start``/``seg_write``/
+  ``accum_prev``), per-item block coordinates, the row liveness mask, and —
+  when the plan was built with ``with_grad=True`` — a nested backward plan
+  for the transposed schedule;
 * **static aux data** (hashable python values): grid sizes, block shape,
   policy name, kind, the traffic estimate, and the pattern fingerprint.
 
@@ -21,7 +23,10 @@ import dataclasses
 from typing import Any, Dict, Optional, Tuple
 
 import jax
+import jax.numpy as jnp
 import numpy as np
+
+from repro.core.formats import QUANT_DTYPES
 
 SPMM = "spmm"
 SPGEMM = "spgemm"
@@ -30,6 +35,7 @@ SPGEMM = "spgemm"
 # child pytree); None fields flatten to zero leaves.
 _LEAF_FIELDS = (
     "lhs_blocks", "rhs_blocks",
+    "lhs_scales", "rhs_scales",
     "m_idx", "k_idx",
     "a_idx", "b_idx", "c_idx",
     "slot_idx", "valid",
@@ -40,7 +46,8 @@ _LEAF_FIELDS = (
 )
 _AUX_FIELDS = ("kind", "policy", "block_shape", "grid", "rhs_grid",
                "n_out_blocks", "traffic_items", "fingerprint", "backend",
-               "n_lanes", "unroll", "transpose_lhs")
+               "n_lanes", "unroll", "transpose_lhs", "block_dtype",
+               "out_dtype")
 
 
 @dataclasses.dataclass(eq=False)   # array fields make generated __eq__ ambiguous
@@ -73,10 +80,14 @@ class SegmentPlan:
     n_lanes: int = 1                              # parallel lanes in the grid
     unroll: int = 1                               # items per grid step
     transpose_lhs: bool = False                   # kernel contracts Aᵀ (bwd)
+    block_dtype: str = "fp32"                     # "fp32" | "int8" | "fp8"
+    out_dtype: Optional[str] = None               # dtype name | None=float32
 
     # --- pytree leaves (device arrays; None where not applicable) ---
     lhs_blocks: Optional[jax.Array] = None
     rhs_blocks: Optional[jax.Array] = None
+    lhs_scales: Optional[jax.Array] = None        # (n_blocks,) fp32 | None
+    rhs_scales: Optional[jax.Array] = None
     m_idx: Optional[jax.Array] = None
     k_idx: Optional[jax.Array] = None
     a_idx: Optional[jax.Array] = None
@@ -161,16 +172,50 @@ class SegmentPlan:
     def replace(self, **kw) -> "SegmentPlan":
         return dataclasses.replace(self, **kw)
 
-    def with_values(self, lhs_blocks, rhs_blocks=None) -> "SegmentPlan":
+    @property
+    def quantized(self) -> bool:
+        """True when block values are stored quantized (+ per-block scales)."""
+        return self.block_dtype != "fp32"
+
+    def with_values(self, lhs_blocks, rhs_blocks=None, *, lhs_scales=None,
+                    rhs_scales=None) -> "SegmentPlan":
         """Same schedule, new block values (e.g. the current train params).
 
         ``lhs_blocks`` must match the plan's storage layout: original BSR
-        (row-major) block order for both plan kinds.
+        (row-major) block order for both plan kinds.  Quantized plans take
+        the low-precision payload plus the matching per-block ``*_scales``
+        (``None`` keeps the plan's current scales).
         """
+        self._check_value_dtype("lhs_blocks", lhs_blocks)
         kw: Dict[str, Any] = {"lhs_blocks": lhs_blocks}
         if rhs_blocks is not None:
+            self._check_value_dtype("rhs_blocks", rhs_blocks)
             kw["rhs_blocks"] = rhs_blocks
+        if lhs_scales is not None:
+            kw["lhs_scales"] = lhs_scales
+        if rhs_scales is not None:
+            kw["rhs_scales"] = rhs_scales
         return dataclasses.replace(self, **kw)
+
+    def _check_value_dtype(self, name: str, blocks) -> None:
+        """New block values must match the plan's storage format: a
+        quantized plan silently applying its per-block scales to fp32
+        values (or an fp32 plan fed a raw payload) is numerically wrong in
+        a way no shape check catches."""
+        got = np.dtype(jnp.result_type(blocks))
+        if self.quantized:
+            expect = QUANT_DTYPES[self.block_dtype]
+            if got != expect:
+                raise ValueError(
+                    f"{name} has dtype {got}, but this plan stores "
+                    f"{self.block_dtype} payloads ({expect}) — quantize the "
+                    f"values (repro.core.formats.quantize_blocks) or use the "
+                    f"fp32 plan of this pattern")
+        elif got in QUANT_DTYPES.values():
+            raise ValueError(
+                f"{name} has quantized payload dtype {got}, but this plan "
+                f"stores fp32 blocks — build it with plan_matmul(..., "
+                f"quantize=...) to carry the matching scales")
 
     def __call__(self, rhs=None, *, bn: int = 512, backend: Optional[str] = None,
                  interpret: Optional[bool] = None, out_dtype=None):

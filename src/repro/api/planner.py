@@ -22,7 +22,11 @@ data on the host.
 * ``n_lanes > 1``            → the schedule is split into load-balanced
   parallel lanes at segment-chain boundaries (see
   :func:`repro.core.schedule.partition_lanes`); ``unroll`` additionally
-  groups items per grid step.
+  groups items per grid step;
+* ``quantize="int8"|"fp8"``  → block values are stored as a quantized
+  payload + per-block fp32 scales (dequantized in-kernel at the fp32
+  accumulator); the fingerprint carries the storage dtype, so quantized
+  and fp32 plans of one pattern never collide in the cache.
 """
 from __future__ import annotations
 
@@ -33,7 +37,8 @@ from typing import Dict, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import BSR
+from repro.core.formats import (BSR, QUANT_DTYPES, QuantizedBlocks,
+                                quantize_blocks)
 from repro.core.policies import get_policy
 from repro.core.schedule import (LaneLayout, build_spgemm_schedule,
                                  build_spmm_schedule, finalize_schedule,
@@ -71,17 +76,72 @@ def _pattern_bytes(h, m: BSR) -> None:
 
 def pattern_fingerprint(kind: str, policy_key: str, fold_len: Optional[int],
                         with_grad: bool, *mats: BSR, n_lanes: int = 1,
-                        unroll: int = 1) -> str:
+                        unroll: int = 1, block_dtype: str = "fp32") -> str:
     """Digest of everything the *schedule* depends on (never block values,
     never the dense-N traffic hint).  ``policy_key`` should include the
     policy's registration serial so re-registering a name under a different
-    ordering can't be served a stale schedule."""
+    ordering can't be served a stale schedule.  ``block_dtype`` is part of
+    the digest: a quantized plan carries scale leaves and dtype-scaled
+    traffic that an fp32 plan of the same pattern must never be served."""
     h = hashlib.sha1()
     h.update(f"{kind}|{policy_key}|{fold_len}|{with_grad}"
-             f"|lanes={n_lanes}|unroll={unroll}".encode())
+             f"|lanes={n_lanes}|unroll={unroll}"
+             f"|dtype={block_dtype}".encode())
     for m in mats:
         _pattern_bytes(h, m)
     return h.hexdigest()
+
+
+def _quantize_a_traffic(basis: dict, block_dtype: str, bm: int,
+                        bk: int) -> dict:
+    """Re-price a traffic estimate's A-tile bytes for a quantized payload.
+
+    An A fetch moves ``bm·bk`` payload bytes plus one fp32 scale instead of
+    ``bm·bk`` fp32 elements; B/C stay fp32 (the dense rhs and the fp32
+    accumulator output are not quantized)."""
+    if block_dtype == "fp32":
+        return basis
+    itemsize = QUANT_DTYPES[block_dtype].itemsize
+    out = dict(basis)
+    a_fetches = basis["a_bytes"] / float(bm * bk * 4)
+    out["a_bytes"] = a_fetches * (bm * bk * itemsize + 4)
+    out["total"] = out["a_bytes"] + out["b_bytes"] + out["c_bytes"]
+    return out
+
+
+def _quantize_spgemm_traffic(traffic: dict, block_dtype: str, bm: int,
+                             bk: int, bn: int) -> dict:
+    """Same re-pricing for SpGEMM, where both operands are quantized."""
+    if block_dtype == "fp32":
+        return traffic
+    itemsize = QUANT_DTYPES[block_dtype].itemsize
+    out = dict(traffic)
+    a_fetches = traffic["a_bytes"] / float(bm * bk * 4)
+    out["a_bytes"] = a_fetches * (bm * bk * itemsize + 4)
+    out["b_bytes"] = traffic["b_fetches"] * (bk * bn * itemsize + 4)
+    out["total"] = out["a_bytes"] + out["b_bytes"] + out["c_bytes"]
+    return out
+
+
+def _realize_values(blocks, block_dtype: str):
+    """Device ``(payload, scales)`` for a plan's value leaves.
+
+    fp32 plans upload the caller's buffer as-is (identity when it already
+    lives on device).  Quantized plans accept either a pre-quantized
+    :class:`~repro.core.formats.QuantizedBlocks` — payload + scales upload
+    verbatim, the zero-copy path for weights quantized once at load time —
+    or an fp32 array, quantized here per block (elementwise, storage order
+    preserved: still no schedule-order gather)."""
+    if isinstance(blocks, QuantizedBlocks):
+        if blocks.dtype != block_dtype:
+            raise ValueError(
+                f"pre-quantized blocks are {blocks.dtype!r} but the plan "
+                f"was requested with quantize={block_dtype!r}")
+        return jnp.asarray(blocks.payload), jnp.asarray(blocks.scales)
+    if block_dtype == "fp32":
+        return jnp.asarray(blocks), None
+    q = quantize_blocks(np.asarray(blocks), block_dtype)
+    return jnp.asarray(q.payload), jnp.asarray(q.scales)
 
 
 @dataclasses.dataclass
@@ -99,20 +159,23 @@ class _PlanTemplate:
     grad_traffic_basis: Optional[dict] = None   # spmm bwd, at n_cols=1
 
     def realize(self, a: BSR, b: Optional[BSR], backend: Optional[str],
-                n_cols_hint: int) -> SegmentPlan:
+                n_cols_hint: int, out_dtype: Optional[str]) -> SegmentPlan:
+        dtype = self.plan.block_dtype
+        lhs_blocks, lhs_scales = _realize_values(a.blocks, dtype)
         if self.plan.kind == SPMM:
             grad = self.plan.grad_plan
             if grad is not None and self.grad_traffic_basis is not None:
                 grad = grad.replace(traffic_items=_freeze_traffic(
                     _scale_spmm_traffic(self.grad_traffic_basis, n_cols_hint)))
             return self.plan.replace(
-                lhs_blocks=jnp.asarray(a.blocks),
+                lhs_blocks=lhs_blocks, lhs_scales=lhs_scales,
                 traffic_items=_freeze_traffic(
                     _scale_spmm_traffic(self.traffic_basis, n_cols_hint)),
-                grad_plan=grad, backend=backend)
-        return self.plan.replace(lhs_blocks=jnp.asarray(a.blocks),
-                                 rhs_blocks=jnp.asarray(b.blocks),
-                                 backend=backend)
+                grad_plan=grad, backend=backend, out_dtype=out_dtype)
+        rhs_blocks, rhs_scales = _realize_values(b.blocks, dtype)
+        return self.plan.replace(lhs_blocks=lhs_blocks, lhs_scales=lhs_scales,
+                                 rhs_blocks=rhs_blocks, rhs_scales=rhs_scales,
+                                 backend=backend, out_dtype=out_dtype)
 
 
 _CACHE: Dict[str, _PlanTemplate] = {}
@@ -120,27 +183,43 @@ _STATS = {"hits": 0, "misses": 0}
 
 
 def clear_plan_cache() -> None:
+    """Drop every cached template — all ``block_dtype`` variants included
+    (fp32 and quantized plans of one pattern are distinct entries)."""
     _CACHE.clear()
     _STATS["hits"] = _STATS["misses"] = 0
 
 
 def plan_cache_stats() -> Dict[str, int]:
-    return dict(_STATS, size=len(_CACHE))
+    """Hit/miss counters + cache size, with entries broken out per
+    ``block_dtype`` (``by_dtype``) — quantized plans of a pattern are
+    separate cache entries from the fp32 plan of the same pattern."""
+    by_dtype: Dict[str, int] = {}
+    for tpl in _CACHE.values():
+        d = tpl.plan.block_dtype
+        by_dtype[d] = by_dtype.get(d, 0) + 1
+    return dict(_STATS, size=len(_CACHE), by_dtype=by_dtype)
 
 
 def _lane_flags(layout: LaneLayout, seg_start, seg_write, accum_prev) -> dict:
-    """Lane-major schedule flag/index arrays as jnp leaves."""
+    """Lane-major schedule flag arrays — host numpy; the build path feeds
+    them to the traffic model before :func:`_flag_leaves` uploads them."""
     return dict(
-        seg_start=jnp.asarray(lane_select(layout, seg_start, zero_pads=True)),
-        seg_write=jnp.asarray(lane_select(layout, seg_write, zero_pads=True)),
-        accum_prev=jnp.asarray(
-            lane_select(layout, accum_prev, zero_pads=True)),
-        valid=jnp.asarray(layout.valid.reshape(-1).astype(np.int32)))
+        seg_start=lane_select(layout, seg_start, zero_pads=True),
+        seg_write=lane_select(layout, seg_write, zero_pads=True),
+        accum_prev=lane_select(layout, accum_prev, zero_pads=True),
+        valid=layout.valid.reshape(-1).astype(np.int32))
+
+
+def _flag_leaves(flags: dict) -> dict:
+    """jnp device leaves for a plan's flag arrays (one upload, at the end of
+    the build — never a device→host round trip on the build path)."""
+    return {k: jnp.asarray(v) for k, v in flags.items()}
 
 
 def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
                          with_grad: bool, n_lanes: int, unroll: int,
-                         fingerprint: str) -> _PlanTemplate:
+                         fingerprint: str,
+                         block_dtype: str = "fp32") -> _PlanTemplate:
     sched = build_spmm_schedule(a, policy=policy, fold_len=fold_len)
     fin = finalize_schedule(sched.seg_start, sched.m, n_slots=sched.n_m_blocks)
     bm, bk = a.block_shape
@@ -149,9 +228,10 @@ def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
     lane_k = lane_select(layout, sched.k)
     flags = _lane_flags(layout, sched.seg_start, sched.seg_write,
                         fin.accum_prev)
-    basis = lane_traffic_spmm(
-        lane_m, lane_k, np.asarray(flags["seg_start"]),
-        layout.valid.reshape(-1), layout.n_lanes, bm, bk, 1)
+    basis = _quantize_a_traffic(lane_traffic_spmm(
+        lane_m, lane_k, flags["seg_start"],
+        layout.valid.reshape(-1), layout.n_lanes, bm, bk, 1, unroll=unroll),
+        block_dtype, bm, bk)
     basis.update(layout.stats)
 
     grad_plan = None
@@ -176,9 +256,10 @@ def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
         t_lane_k = lane_select(t_layout, t_sched.k)
         t_flags = _lane_flags(t_layout, t_sched.seg_start, t_sched.seg_write,
                               t_fin.accum_prev)
-        grad_basis = lane_traffic_spmm(
-            t_lane_m, t_lane_k, np.asarray(t_flags["seg_start"]),
-            t_layout.valid.reshape(-1), t_layout.n_lanes, bk, bm, 1)
+        grad_basis = _quantize_a_traffic(lane_traffic_spmm(
+            t_lane_m, t_lane_k, t_flags["seg_start"],
+            t_layout.valid.reshape(-1), t_layout.n_lanes, bk, bm, 1,
+            unroll=unroll), block_dtype, bk, bm)
         grad_basis.update(t_layout.stats)
         grad_plan = SegmentPlan(
             kind=SPMM, policy=policy, block_shape=(bk, bm),
@@ -186,6 +267,7 @@ def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
             n_out_blocks=t_sched.n_m_blocks,
             traffic_items=(),   # re-priced per realize from grad_basis
             fingerprint=fingerprint + ":grad",
+            block_dtype=block_dtype,
             n_lanes=t_layout.n_lanes, unroll=unroll, transpose_lhs=True,
             m_idx=jnp.asarray(t_lane_m.astype(np.int32)),
             k_idx=jnp.asarray(t_lane_k.astype(np.int32)),
@@ -193,14 +275,14 @@ def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
                                  .astype(np.int32)),
             row_mask=jnp.asarray(t_fin.row_mask),
             a_brow=jnp.asarray(a.brow), a_bcol=jnp.asarray(a.bcol),
-            **t_flags)
+            **_flag_leaves(t_flags))
 
     plan = SegmentPlan(
         kind=SPMM, policy=policy, block_shape=(bm, bk),
         grid=(sched.n_m_blocks, sched.n_k_blocks), rhs_grid=None,
         n_out_blocks=sched.n_m_blocks,
         traffic_items=(),   # re-priced per realize from traffic_basis
-        fingerprint=fingerprint,
+        fingerprint=fingerprint, block_dtype=block_dtype,
         n_lanes=layout.n_lanes, unroll=unroll,
         m_idx=jnp.asarray(lane_m.astype(np.int32)),
         k_idx=jnp.asarray(lane_k.astype(np.int32)),
@@ -208,14 +290,15 @@ def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
                              .astype(np.int32)),
         row_mask=jnp.asarray(fin.row_mask),
         a_brow=jnp.asarray(a.brow), a_bcol=jnp.asarray(a.bcol),
-        grad_plan=grad_plan, **flags)
+        grad_plan=grad_plan, **_flag_leaves(flags))
     return _PlanTemplate(plan=plan, traffic_basis=basis,
                          grad_traffic_basis=grad_basis)
 
 
 def _build_spgemm_template(a: BSR, b: BSR, policy: str,
                            fold_len: Optional[int], n_lanes: int, unroll: int,
-                           fingerprint: str) -> _PlanTemplate:
+                           fingerprint: str,
+                           block_dtype: str = "fp32") -> _PlanTemplate:
     sched = build_spgemm_schedule(a, b, policy=policy, fold_len=fold_len)
     fin = finalize_schedule(sched.seg_start, sched.c_idx)
     bm, bk = a.block_shape
@@ -227,15 +310,16 @@ def _build_spgemm_template(a: BSR, b: BSR, policy: str,
     lane_c = lane_select(layout, sched.c_idx)
     flags = _lane_flags(layout, sched.seg_start, sched.seg_write,
                         fin.accum_prev)
-    traffic = lane_traffic_spgemm(
-        lane_a, lane_b, lane_c, np.asarray(flags["seg_start"]),
-        layout.valid.reshape(-1), layout.n_lanes, bm, bk, bn)
+    traffic = _quantize_spgemm_traffic(lane_traffic_spgemm(
+        lane_a, lane_b, lane_c, flags["seg_start"],
+        layout.valid.reshape(-1), layout.n_lanes, bm, bk, bn, unroll=unroll),
+        block_dtype, bm, bk, bn)
     traffic.update(layout.stats)
     plan = SegmentPlan(
         kind=SPGEMM, policy=policy, block_shape=(bm, bk),
         grid=a.grid, rhs_grid=b.grid, n_out_blocks=sched.n_c_blocks,
         traffic_items=_freeze_traffic(traffic),
-        fingerprint=fingerprint,
+        fingerprint=fingerprint, block_dtype=block_dtype,
         n_lanes=layout.n_lanes, unroll=unroll,
         a_idx=jnp.asarray(lane_a.astype(np.int32)),
         b_idx=jnp.asarray(lane_b.astype(np.int32)),
@@ -243,7 +327,7 @@ def _build_spgemm_template(a: BSR, b: BSR, policy: str,
         a_brow=jnp.asarray(a.brow), a_bcol=jnp.asarray(a.bcol),
         b_brow=jnp.asarray(b.brow), b_bcol=jnp.asarray(b.bcol),
         c_brow_arr=jnp.asarray(sched.c_brow),
-        c_bcol_arr=jnp.asarray(sched.c_bcol), **flags)
+        c_bcol_arr=jnp.asarray(sched.c_bcol), **_flag_leaves(flags))
     return _PlanTemplate(plan=plan)
 
 
@@ -272,8 +356,9 @@ def _rhs_to_hint(a: BSR, b) -> Tuple[Optional[BSR], int]:
 def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
                 backend: Optional[str] = None, fold_len: Optional[int] = None,
                 with_grad: bool = False, n_cols_hint: Optional[int] = None,
-                n_lanes: int = 1, unroll: int = 1,
-                cache: bool = True) -> SegmentPlan:
+                n_lanes: int = 1, unroll: int = 1, cache: bool = True,
+                quantize: Optional[str] = None,
+                out_dtype=None) -> SegmentPlan:
     """Plan a Segment-dataflow matmul for the sparsity pattern of ``a``.
 
     Args:
@@ -292,9 +377,21 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
       unroll: schedule items executed per kernel grid step (aligned at
         plan time; amortizes grid overhead on small blocks).
       cache: reuse the pattern-fingerprint plan cache.
+      quantize: ``"int8"`` / ``"fp8"`` store block values as a quantized
+        payload + per-block fp32 scales, dequantized in-kernel at the fp32
+        accumulator (both operands for SpGEMM; the dense rhs stays fp32).
+        ``None`` keeps fp32 storage.  Quantized and fp32 plans of one
+        pattern never share a cache entry or fingerprint.
+      out_dtype: default dtype of the written output tiles (resolved at
+        execution; overridable per call).  Accumulation stays fp32.
     """
     if backend is not None:
         resolve_backend(backend)   # fail fast on typos
+    if quantize is not None and quantize not in QUANT_DTYPES:
+        raise ValueError(f"unknown quantize dtype {quantize!r}; "
+                         f"available: {tuple(QUANT_DTYPES)} or None")
+    block_dtype = quantize if quantize is not None else "fp32"
+    out_dtype = None if out_dtype is None else jnp.dtype(out_dtype).name
     pol = get_policy(policy)       # fail fast + serial for the cache key
     b, hint = _rhs_to_hint(a, b_or_shape)
     if n_cols_hint is not None:
@@ -306,18 +403,18 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
     mats = (a, b) if b is not None else (a,)
     key = pattern_fingerprint(kind, f"{policy}#{pol.serial}", fold_len,
                               with_grad, *mats, n_lanes=n_lanes,
-                              unroll=unroll)
+                              unroll=unroll, block_dtype=block_dtype)
     tpl = _CACHE.get(key) if cache else None
     if tpl is None:
         if kind == SPMM:
             tpl = _build_spmm_template(a, policy, fold_len, with_grad,
-                                       n_lanes, unroll, key)
+                                       n_lanes, unroll, key, block_dtype)
         else:
             tpl = _build_spgemm_template(a, b, policy, fold_len, n_lanes,
-                                         unroll, key)
+                                         unroll, key, block_dtype)
         _STATS["misses"] += 1   # a build is a miss whether or not it's kept
         if cache:
             _CACHE[key] = tpl
     else:
         _STATS["hits"] += 1
-    return tpl.realize(a, b, backend, hint)
+    return tpl.realize(a, b, backend, hint, out_dtype)

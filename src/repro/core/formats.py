@@ -20,6 +20,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Tuple
 
+import ml_dtypes
 import numpy as np
 
 
@@ -280,6 +281,101 @@ class BSR:
         order = np.lexsort((self.brow, self.bcol))
         return BSR(self.shape, self.block_shape, self.brow[order],
                    self.bcol[order], self.blocks[order])
+
+
+# ---------------------------------------------------------------------------
+# Quantized block storage (int8 / fp8-e4m3 payloads + per-block fp32 scales)
+# ---------------------------------------------------------------------------
+
+#: Supported quantized payload dtypes.  ``"fp32"`` is the unquantized
+#: sentinel used by plans; it never appears as a :class:`QuantizedBlocks`
+#: dtype.  fp8 is e4m3 (the inference-standard variant: 4 exponent bits,
+#: max finite value 448) via ml_dtypes, so ``core`` stays jax-free.
+QUANT_DTYPES = {
+    "int8": np.dtype(np.int8),
+    "fp8": np.dtype(ml_dtypes.float8_e4m3fn),
+}
+
+#: Largest representable magnitude of each payload dtype — the per-block
+#: absmax maps onto this value, so the full quantization range is used.
+QUANT_MAX = {"int8": 127.0, "fp8": 448.0}
+
+
+def _check_quant_dtype(dtype: str) -> str:
+    if dtype not in QUANT_DTYPES:
+        raise ValueError(f"unknown quantized block dtype {dtype!r}; "
+                         f"available: {tuple(QUANT_DTYPES)}")
+    return dtype
+
+
+@dataclasses.dataclass
+class QuantizedBlocks:
+    """Quantized BSR block values: low-precision payload + per-block scales.
+
+    ``payload[i]`` holds block ``i``'s tile in ``QUANT_DTYPES[dtype]``;
+    ``scales[i]`` is the fp32 multiplier that restores magnitudes
+    (``dequant = payload.astype(f32) * scales[i]``).  Block order is the
+    carrier BSR's storage order — quantization never reorders, so realizing
+    a quantized plan uploads both arrays verbatim (the zero-copy contract).
+    """
+
+    payload: np.ndarray   # (nblocks, bm, bk) int8 or float8_e4m3fn
+    scales: np.ndarray    # (nblocks,) float32, strictly positive
+    dtype: str            # key into QUANT_DTYPES
+
+    @property
+    def nblocks(self) -> int:
+        return int(self.payload.shape[0])
+
+    @property
+    def block_shape(self) -> Tuple[int, int]:
+        return tuple(self.payload.shape[1:])
+
+    @property
+    def nbytes(self) -> int:
+        """Total storage bytes: quantized payload + the fp32 scales."""
+        return int(self.payload.size * self.payload.itemsize
+                   + self.scales.size * self.scales.itemsize)
+
+
+def quantize_blocks(blocks, dtype: str = "int8") -> QuantizedBlocks:
+    """Per-block absmax quantization of a ``(nblocks, bm, bk)`` tile array.
+
+    Each block's scale is ``absmax / QUANT_MAX[dtype]`` so the block's
+    largest element lands exactly on the dtype's largest magnitude.  An
+    all-zero block gets ``scale = 1.0`` (payload is all zeros anyway) —
+    the scale is never zero, so dequantization can never produce NaN/inf.
+    """
+    _check_quant_dtype(dtype)
+    blocks = np.asarray(blocks, dtype=np.float32)
+    if blocks.ndim != 3:
+        raise ValueError(f"blocks must be (nblocks, bm, bk), got shape "
+                         f"{blocks.shape}")
+    amax = np.abs(blocks).max(axis=(1, 2))
+    scales = np.where(amax > 0, amax / QUANT_MAX[dtype], 1.0).astype(np.float32)
+    scaled = blocks / scales[:, None, None]
+    if dtype == "int8":
+        payload = np.clip(np.rint(scaled), -127.0, 127.0).astype(np.int8)
+    else:
+        payload = scaled.astype(QUANT_DTYPES[dtype])  # RTNE cast (ml_dtypes)
+    return QuantizedBlocks(payload=payload, scales=scales, dtype=dtype)
+
+
+def dequantize_blocks(q: QuantizedBlocks) -> np.ndarray:
+    """fp32 reconstruction of quantized blocks (round-trip helper)."""
+    return (np.asarray(q.payload, dtype=np.float32)
+            * np.asarray(q.scales, dtype=np.float32)[:, None, None])
+
+
+def quant_error_bound(dtype: str) -> float:
+    """Per-element round-trip bound as a fraction of the block's absmax.
+
+    int8: half an integer step of the 254-step range → ``amax / 254``.
+    fp8-e4m3 (3 mantissa bits): relative error ≤ 2⁻⁴ of the element, which
+    is ≤ ``amax / 16``; subnormal payloads only tighten the bound.
+    """
+    _check_quant_dtype(dtype)
+    return {"int8": 1.0 / 254.0, "fp8": 1.0 / 16.0}[dtype]
 
 
 def random_csr(rng: np.random.Generator, shape, density: float) -> CSR:

@@ -482,24 +482,29 @@ def lane_select(layout: LaneLayout, arr: np.ndarray,
 
 
 def _revisit_traffic(fetch_streams, owner, seg_start, valid, n_lanes,
-                     c_tile_bytes):
+                     c_tile_bytes, unroll: int = 1):
     """Shared revisiting-model core over flattened lane-major arrays.
 
     ``fetch_streams`` is a list of ``(arr, tile_bytes, always)`` operand
     streams: an operand tile is fetched when its index differs from the
     previous step's *within the same lane* (lane boundaries always re-fetch:
     the SELECTA boundary-reuse chain is broken where a schedule is cut into
-    lanes), or on every valid step when ``always``.  C tiles are written once
-    per segment head and read back on owner revisits (folded continuations /
-    non-contiguous re-starts).  Pads (``valid == 0``) move no data.
+    lanes), or on every valid step when ``always``.  With ``unroll > 1``
+    the kernels bind each of the G items of a grid step to an *independent*
+    BlockSpec stream (index maps strided by ``unroll``), so Pallas only
+    revisits position ``g`` of step ``s-1`` from position ``g`` of step
+    ``s`` — the model compares indices per stream, never across the items
+    inside one step.  C tiles are written once per segment head and read
+    back on owner revisits (folded continuations / non-contiguous
+    re-starts).  Pads (``valid == 0``) move no data.
     """
     valid = np.asarray(valid, dtype=bool)
     fetches = []
     for arr, tile_bytes, always in fetch_streams:
-        a2 = np.asarray(arr).reshape(n_lanes, -1)
-        delta = np.ones_like(a2, dtype=bool)
-        if a2.shape[1] > 1:
-            delta[:, 1:] = a2[:, 1:] != a2[:, :-1]
+        a3 = np.asarray(arr).reshape(n_lanes, -1, unroll)
+        delta = np.ones_like(a3, dtype=bool)
+        if a3.shape[1] > 1:
+            delta[:, 1:, :] = a3[:, 1:, :] != a3[:, :-1, :]
         if always:
             n_fetch = int(valid.sum())
         else:
@@ -519,18 +524,21 @@ def _revisit_traffic(fetch_streams, owner, seg_start, valid, n_lanes,
 
 
 def lane_traffic_spmm(m, k, seg_start, valid, n_lanes: int, bm: int, bk: int,
-                      n_cols: int, bytes_per_el: int = 4) -> dict:
+                      n_cols: int, bytes_per_el: int = 4,
+                      unroll: int = 1) -> dict:
     """Revisiting-model HBM bytes for the lane-parallel SpMM kernel.
 
     Arrays are flattened lane-major (``n_lanes * lane_len``).  A tiles are
     fetched once per valid item; a B row-block is fetched when ``k`` changes
-    within a lane (and always at a lane start — lane cuts break the
-    boundary-k chaining the Segment order set up); C tiles follow the
-    segment write/revisit rule, with owners confined to single lanes.
+    within a lane *per unroll stream* (and always at a lane start — lane
+    cuts break the boundary-k chaining the Segment order set up); C tiles
+    follow the segment write/revisit rule, with owners confined to single
+    lanes.
     """
     fetches, c_segments, c_bytes = _revisit_traffic(
         [(k, 0, True), (k, bk * n_cols * bytes_per_el, False)],
-        m, seg_start, valid, n_lanes, bm * n_cols * bytes_per_el)
+        m, seg_start, valid, n_lanes, bm * n_cols * bytes_per_el,
+        unroll=unroll)
     a_bytes = fetches[0][0] * bm * bk * bytes_per_el
     b_fetches, b_bytes = fetches[1]
     total = a_bytes + b_bytes + c_bytes
@@ -539,13 +547,14 @@ def lane_traffic_spmm(m, k, seg_start, valid, n_lanes: int, bm: int, bk: int,
 
 
 def lane_traffic_spgemm(a_idx, b_idx, c_idx, seg_start, valid, n_lanes: int,
-                        bm: int, bk: int, bn: int,
-                        bytes_per_el: int = 4) -> dict:
+                        bm: int, bk: int, bn: int, bytes_per_el: int = 4,
+                        unroll: int = 1) -> dict:
     """Revisiting-model HBM bytes for the lane-parallel SpGEMM kernel."""
     fetches, c_segments, c_bytes = _revisit_traffic(
         [(a_idx, bm * bk * bytes_per_el, False),
          (b_idx, bk * bn * bytes_per_el, False)],
-        c_idx, seg_start, valid, n_lanes, bm * bn * bytes_per_el)
+        c_idx, seg_start, valid, n_lanes, bm * bn * bytes_per_el,
+        unroll=unroll)
     _, a_bytes = fetches[0]
     b_fetches, b_bytes = fetches[1]
     total = a_bytes + b_bytes + c_bytes

@@ -30,31 +30,44 @@ def bsr_to_dense(blocks, brow, bcol, grid_m, grid_k):
     return jax.lax.fori_loop(0, nb, body, out)
 
 
+def dequant_blocks_ref(blocks, scales):
+    """fp32 blocks from a quantized payload + per-block scales (no-op for
+    ``scales=None``) — the oracle-side mirror of the kernels' in-kernel
+    dequantization."""
+    blocks = blocks.astype(jnp.float32)
+    if scales is None:
+        return blocks
+    return blocks * scales.astype(jnp.float32)[:, None, None]
+
+
 def spmm_ref(blocks, brow, bcol, grid_m, grid_k, b_dense,
-             transpose_lhs: bool = False):
+             transpose_lhs: bool = False, scales=None):
     """C = BSR(A) @ B (or BSR(A)ᵀ @ B), computed densely.
 
     ``brow``/``bcol``/``grid_m``/``grid_k`` always describe the *stored* A;
     ``transpose_lhs`` contracts along its rows instead (the backward-pass
     oracle reads the forward storage, mirroring the kernel's zero-copy
-    transpose mode).
+    transpose mode).  ``scales`` dequantizes a quantized block payload.
     """
-    a = bsr_to_dense(blocks, brow, bcol, grid_m, grid_k)
+    a = bsr_to_dense(dequant_blocks_ref(blocks, scales), brow, bcol,
+                     grid_m, grid_k)
     if transpose_lhs:
         a = a.T
     return (a.astype(jnp.float32) @ b_dense.astype(jnp.float32))
 
 
 def spgemm_ref(a_blocks, a_brow, a_bcol, a_grid, b_blocks, b_brow, b_bcol,
-               b_grid, c_brow, c_bcol):
+               b_grid, c_brow, c_bcol, a_scales=None, b_scales=None):
     """C blocks (at the symbolic pattern positions) of BSR(A) @ BSR(B)."""
     gm, gk = a_grid
     gk2, gn = b_grid
     bm = a_blocks.shape[1]
     bk = a_blocks.shape[2]
     bn = b_blocks.shape[2]
-    a = bsr_to_dense(a_blocks, a_brow, a_bcol, gm, gk)
-    b = bsr_to_dense(b_blocks, b_brow, b_bcol, gk2, gn)
+    a = bsr_to_dense(dequant_blocks_ref(a_blocks, a_scales), a_brow, a_bcol,
+                     gm, gk)
+    b = bsr_to_dense(dequant_blocks_ref(b_blocks, b_scales), b_brow, b_bcol,
+                     gk2, gn)
     c = a.astype(jnp.float32) @ b.astype(jnp.float32)
     def gather(i):
         return jax.lax.dynamic_slice(c, (c_brow[i] * bm, c_bcol[i] * bn), (bm, bn))

@@ -33,9 +33,14 @@ from .compat import CompilerParams
 from .segment_spmm import validate_schedule_args
 
 
-def _make_kernel(lane_len: int, unroll: int, masked: bool):
+def _make_kernel(lane_len: int, unroll: int, masked: bool, quant_a: bool,
+                 quant_b: bool):
     def _kernel(a_idx, b_idx, c_idx, seg_start, seg_write, accum_prev,
                 valid, *refs):
+        if quant_a:
+            a_scales, refs = refs[0], refs[1:]
+        if quant_b:
+            b_scales, refs = refs[0], refs[1:]
         a_refs = refs[:unroll]
         b_refs = refs[unroll:2 * unroll]
         out = refs[2 * unroll]
@@ -59,6 +64,12 @@ def _make_kernel(lane_len: int, unroll: int, masked: bool):
                 b_refs[g][0].astype(jnp.float32),
                 dimension_numbers=(((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)
+            # per-block scales are scalar tile factors — applying them to
+            # the fp32 product (after the dot, before accumulation) is exact
+            if quant_a:
+                contrib = contrib * a_scales[a_idx[i]]
+            if quant_b:
+                contrib = contrib * b_scales[b_idx[i]]
             if masked:
                 contrib = jnp.where(valid[i] == 1, contrib, 0.0)
             acc[...] += contrib
@@ -75,35 +86,53 @@ def _make_kernel(lane_len: int, unroll: int, masked: bool):
 def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
                    seg_write, accum_prev, valid, *, n_c_blocks: int,
                    n_lanes: int = 1, unroll: int = 1, masked: bool = True,
-                   interpret: bool = False, out_dtype=jnp.float32):
+                   interpret: bool = False, out_dtype=jnp.float32,
+                   a_scales=None, b_scales=None):
     """Numeric SpGEMM phase.
 
     Args:
-      a_blocks: (na, bm, bk) BSR A tiles (original order).
-      b_blocks: (nb, bk, bn) BSR B tiles (original order).
+      a_blocks: (na, bm, bk) BSR A tiles (original order; fp32 or a
+        quantized payload — pass ``a_scales``).
+      b_blocks: (nb, bk, bn) BSR B tiles (original order; ditto
+        ``b_scales``).
       a_idx/b_idx/c_idx: (n_items,) int32 — triple → block-slot maps,
         flattened lane-major schedule order.
       seg_start/seg_write/accum_prev/valid: (n_items,) int32 schedule flags.
       n_c_blocks: number of symbolic C blocks.
       n_lanes/unroll: lane-parallel grid shape (see module docstring).
+      a_scales/b_scales: per-block fp32 dequantization scales
+        (``(na,)`` / ``(nb,)``) riding the scalar-prefetch path; applied to
+        the fp32 accumulator via the same ``a_idx``/``b_idx`` indirection.
     Returns:
       (n_c_blocks, bm, bn) C blocks, ordered as the symbolic pattern.
     """
     n_items = seg_start.shape[0]
     bm, bk = a_blocks.shape[1:]
     bn = b_blocks.shape[2]
+    if a_scales is not None and a_scales.shape != (a_blocks.shape[0],):
+        raise ValueError(
+            f"a_scales has shape {a_scales.shape}, expected one fp32 scale "
+            f"per stored block ({a_blocks.shape[0]},)")
+    if b_scales is not None and b_scales.shape != (b_blocks.shape[0],):
+        raise ValueError(
+            f"b_scales has shape {b_scales.shape}, expected one fp32 scale "
+            f"per stored block ({b_blocks.shape[0]},)")
     validate_schedule_args(
         n_items, n_lanes, unroll,
         {"a_idx": a_idx, "b_idx": b_idx, "c_idx": c_idx,
          "seg_write": seg_write, "accum_prev": accum_prev, "valid": valid})
     lane_len = n_items // n_lanes
+    quant_a = a_scales is not None
+    quant_b = b_scales is not None
 
+    # index maps absorb the variable scalar-prefetch tail (*rest) so the
+    # optional scale operands don't change their arity
     def sel(ref_pick, g):
-        return lambda l, s, ai, bi, ci, st, w, p, v: (
+        return lambda l, s, ai, bi, *rest: (
             ref_pick(ai, bi)[l * lane_len + s * unroll + g], 0, 0)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=7,
+        num_scalar_prefetch=7 + int(quant_a) + int(quant_b),
         grid=(n_lanes, lane_len // unroll),
         in_specs=(
             [pl.BlockSpec((1, bm, bk), sel(lambda ai, bi: ai, g))
@@ -112,11 +141,14 @@ def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
                for g in range(unroll)]),
         out_specs=pl.BlockSpec(
             (1, bm, bn),
-            lambda l, s, ai, bi, ci, st, w, p, v: (
+            lambda l, s, ai, bi, ci, *rest: (
                 ci[l * lane_len + s * unroll], 0, 0)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
     )
-    kernel = _make_kernel(lane_len, unroll, masked)
+    kernel = _make_kernel(lane_len, unroll, masked, quant_a, quant_b)
+    prefetch = ((a_idx, b_idx, c_idx, seg_start, seg_write, accum_prev, valid)
+                + ((a_scales,) if quant_a else ())
+                + ((b_scales,) if quant_b else ()))
     operands = [a_blocks] * unroll + [b_blocks] * unroll
     return pl.pallas_call(
         kernel,
@@ -125,5 +157,4 @@ def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
         interpret=interpret,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
-    )(a_idx, b_idx, c_idx, seg_start, seg_write, accum_prev, valid,
-      *operands)
+    )(*prefetch, *operands)

@@ -33,7 +33,11 @@ reads the forward weight array with zero copies.
 
 Scalar-prefetch operands (``PrefetchScalarGridSpec``) carry the schedule:
 ``slot_idx, m_idx, k_idx, seg_start, seg_write, accum_prev, valid``
-(``valid=0`` marks lane-padding no-ops whose contribution is masked out).
+(``valid=0`` marks lane-padding no-ops whose contribution is masked out),
+plus — for quantized block storage — the per-block fp32 ``a_scales``,
+applied to the fp32 accumulator via the same ``slot_idx`` indirection
+(dequantization is a kernel-local concern; storage format never leaks into
+the schedule).
 """
 from __future__ import annotations
 
@@ -48,12 +52,14 @@ from .compat import CompilerParams
 
 
 def _make_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
-                 masked: bool):
+                 masked: bool, quantized: bool):
     contract = (((0,), (0,)), ((), ())) if transpose_lhs \
         else (((1,), (0,)), ((), ()))
 
     def _kernel(slot_idx, m_idx, k_idx, seg_start, seg_write, accum_prev,
                 valid, *refs):
+        if quantized:
+            a_scales, refs = refs[0], refs[1:]
         a_refs = refs[:unroll]
         b_refs = refs[unroll:2 * unroll]
         out = refs[2 * unroll]
@@ -77,6 +83,13 @@ def _make_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
                 b_refs[g][...].astype(jnp.float32),
                 dimension_numbers=contract,
                 preferred_element_type=jnp.float32)
+            if quantized:
+                # Per-block scale is a scalar factor of the whole tile, so
+                # applying it to the fp32 product (after the MXU dot) is
+                # algebraically exact: (s·Aq) @ B == s · (Aq @ B).  The scale
+                # is fetched from SMEM via the prefetched block slot — the
+                # same indirection the payload uses, transpose included.
+                contrib = contrib * a_scales[slot_idx[i]]
             if masked:
                 contrib = jnp.where(valid[i] == 1, contrib, 0.0)
             acc[...] += contrib
@@ -112,12 +125,13 @@ def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
                  accum_prev, valid, b_dense, *, grid_m: int, n_lanes: int = 1,
                  bn: int = 512, unroll: int = 1, transpose_lhs: bool = False,
                  masked: bool = True, interpret: bool = False,
-                 out_dtype=jnp.float32):
+                 out_dtype=jnp.float32, a_scales=None):
     """Compute ``C = BSR(A) @ B`` (or ``BSR(A)ᵀ @ B``) under a lane-parallel
     Segment schedule.
 
     Args:
       a_blocks: (n_blocks, bm, bk) A tiles in **original BSR storage order**.
+        May be a quantized payload (int8 / fp8) — pass ``a_scales``.
       slot_idx: (n_items,) int32 — per-item index into ``a_blocks``.
       m_idx/k_idx: (n_items,) int32 output/contraction block coordinates,
         flattened lane-major schedule order.
@@ -133,10 +147,18 @@ def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
       transpose_lhs: contract along each A tile's row axis (``Aᵀ @ B``) —
         the backward pass reads forward storage directly.
       masked: skip the validity mask when the schedule has no pads.
+      a_scales: (n_blocks,) fp32 per-block dequantization scales, or None
+        for fp32 blocks.  Scales ride the scalar-prefetch path (SMEM) and
+        are applied to the fp32 accumulator, addressed by the same
+        ``slot_idx`` indirection as the payload.
     Returns:
       (grid_m * row_block, N) dense output.
     """
     _, bm, bk = a_blocks.shape
+    if a_scales is not None and a_scales.shape != (a_blocks.shape[0],):
+        raise ValueError(
+            f"a_scales has shape {a_scales.shape}, expected one fp32 scale "
+            f"per stored block ({a_blocks.shape[0]},)")
     row_blk, contract_blk = (bk, bm) if transpose_lhs else (bm, bk)
     k_dim, n_dim = b_dense.shape
     if k_dim % contract_blk != 0:
@@ -156,17 +178,20 @@ def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
     n_items = seg_start.shape[0]
     lane_len = n_items // n_lanes
     n_tiles_n = n_dim // bn
+    quantized = a_scales is not None
 
+    # index maps absorb the variable scalar-prefetch tail (*rest) so the
+    # optional a_scales operand doesn't change their arity
     def a_map(g):
-        return lambda l, j, s, slot, m, k, st, w, p, v: (
+        return lambda l, j, s, slot, *rest: (
             slot[l * lane_len + s * unroll + g], 0, 0)
 
     def b_map(g):
-        return lambda l, j, s, slot, m, k, st, w, p, v: (
+        return lambda l, j, s, slot, m, k, *rest: (
             k[l * lane_len + s * unroll + g], j)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=7,
+        num_scalar_prefetch=8 if quantized else 7,
         grid=(n_lanes, n_tiles_n, lane_len // unroll),
         in_specs=(
             [pl.BlockSpec((1, bm, bk), a_map(g)) for g in range(unroll)]
@@ -174,11 +199,13 @@ def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
                for g in range(unroll)]),
         out_specs=pl.BlockSpec(
             (row_blk, bn),
-            lambda l, j, s, slot, m, k, st, w, p, v: (
+            lambda l, j, s, slot, m, *rest: (
                 m[l * lane_len + s * unroll], j)),
         scratch_shapes=[pltpu.VMEM((row_blk, bn), jnp.float32)],
     )
-    kernel = _make_kernel(lane_len, unroll, transpose_lhs, masked)
+    kernel = _make_kernel(lane_len, unroll, transpose_lhs, masked, quantized)
+    prefetch = (slot_idx, m_idx, k_idx, seg_start, seg_write, accum_prev,
+                valid) + ((a_scales,) if quantized else ())
     operands = [a_blocks] * unroll + [b_dense] * unroll
     return pl.pallas_call(
         kernel,
@@ -187,5 +214,4 @@ def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
         interpret=interpret,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-    )(slot_idx, m_idx, k_idx, seg_start, seg_write, accum_prev, valid,
-      *operands)
+    )(*prefetch, *operands)

@@ -67,6 +67,38 @@ def test_partition_lanes_clamps_to_segment_count():
     assert lay.n_lanes == 3
 
 
+def test_lane_traffic_unroll_counts_per_stream_fetches():
+    """Unrolled kernels bind each of the G step items to an independent
+    BlockSpec stream (index maps strided by G), so revisit credit only
+    exists between position g of consecutive steps — never between the
+    items inside one step."""
+    from repro.core.schedule import lane_traffic_spmm
+    # two chains of two items; k = [0, 5, 5, 7]
+    m = np.array([0, 0, 1, 1])
+    k = np.array([0, 5, 5, 7])
+    seg_start = np.array([1, 0, 1, 0])
+    valid = np.ones(4, bool)
+    t1 = lane_traffic_spmm(m, k, seg_start, valid, 1, 8, 8, 1)
+    # adjacent model: items 1->2 share k=5 across the chain boundary
+    assert t1["b_fetches"] == 3
+    t2 = lane_traffic_spmm(m, k, seg_start, valid, 1, 8, 8, 1, unroll=2)
+    # stream model: stream 0 compares k[0]=0 vs k[2]=5, stream 1 k[1]=5 vs
+    # k[3]=7 — the within-step adjacency carries nothing, all 4 fetch
+    assert t2["b_fetches"] == 4
+
+
+def test_unrolled_plan_traffic_matches_stream_model():
+    a = _patterns()["random"]
+    plan = api.plan_matmul(a, n_cols_hint=64, n_lanes=2, unroll=2,
+                           fold_len=3, cache=False)
+    k = np.asarray(plan.k_idx)
+    valid = np.asarray(plan.valid).astype(bool)
+    k3 = k.reshape(plan.n_lanes, -1, plan.unroll)
+    delta = np.ones_like(k3, dtype=bool)
+    delta[:, 1:, :] = k3[:, 1:, :] != k3[:, :-1, :]
+    assert plan.traffic["b_fetches"] == int((delta.reshape(-1) & valid).sum())
+
+
 def test_lane_traffic_accounts_boundary_breaks():
     """Cutting the schedule into lanes re-fetches B at every lane start —
     modeled traffic must not claim cross-lane boundary reuse."""
@@ -146,6 +178,108 @@ def test_lane_vjp_matches_dense(backend):
             np.asarray(gb)[s],
             np.asarray(gw)[r * 32:(r + 1) * 32, c * 32:(c + 1) * 32],
             rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# edge cases: empty symbolic output pattern, single-block matrices
+# ---------------------------------------------------------------------------
+
+
+def test_spgemm_empty_output_pattern():
+    """No A column meets a B row → the symbolic phase yields zero C blocks;
+    the plan must build and execute (empty C array) on every backend."""
+    a = BSR(shape=(64, 64), block_shape=(32, 32),
+            brow=np.array([0, 1], np.int32), bcol=np.array([0, 0], np.int32),
+            blocks=np.ones((2, 32, 32), np.float32))
+    b = BSR(shape=(64, 64), block_shape=(32, 32),
+            brow=np.array([1], np.int32), bcol=np.array([0], np.int32),
+            blocks=np.ones((1, 32, 32), np.float32))
+    assert not (a.block_mask() @ b.block_mask()).any()
+    for quantize in (None, "int8"):
+        plan = api.plan_matmul(a, b, quantize=quantize)
+        assert plan.n_out_blocks == 0 and plan.n_items == 0
+        for backend in ("interpret", "reference"):
+            out = plan(backend=backend)
+            assert out.shape == (0, 32, 32)
+
+
+def test_single_block_matrix_spmm_and_spgemm():
+    rng = np.random.default_rng(20)
+    one = BSR(shape=(32, 32), block_shape=(32, 32),
+              brow=np.array([0], np.int32), bcol=np.array([0], np.int32),
+              blocks=rng.standard_normal((1, 32, 32)).astype(np.float32))
+    x = jnp.asarray(rng.standard_normal((32, 16)).astype(np.float32))
+    plan = api.plan_matmul(one, x.shape, n_lanes=4)   # clamps to 1 chain
+    assert plan.n_lanes == 1 and plan.n_items == 1
+    got = np.asarray(plan(x, bn=16, backend="interpret"))
+    np.testing.assert_allclose(got, one.to_dense() @ np.asarray(x),
+                               rtol=1e-5, atol=1e-5)
+    gplan = api.plan_matmul(one, one)
+    assert gplan.n_out_blocks == 1
+    gotg = np.asarray(gplan(backend="interpret"))
+    np.testing.assert_allclose(gotg[0], one.to_dense() @ one.to_dense(),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# validate_schedule_args error paths (named ValueErrors with shapes)
+# ---------------------------------------------------------------------------
+
+
+def _spmm_args(n_items=2):
+    """Minimal hand-built schedule: n_items same-row items of one block."""
+    i32 = lambda *v: jnp.asarray(np.array(v, np.int32))
+    return dict(
+        a_blocks=jnp.ones((1, 8, 8), jnp.float32),
+        slot_idx=i32(*([0] * n_items)), m_idx=i32(*([0] * n_items)),
+        k_idx=i32(*range(n_items)),
+        seg_start=i32(1, *([0] * (n_items - 1))),
+        seg_write=i32(*([0] * (n_items - 1)), 1),
+        accum_prev=i32(*([0] * n_items)), valid=i32(*([1] * n_items)),
+        b_dense=jnp.ones((8, 16), jnp.float32))
+
+
+def test_segment_spmm_rejects_bad_bn():
+    from repro.kernels.segment_spmm import segment_spmm
+    with pytest.raises(ValueError, match=r"N=16 .* not divisible by the "
+                                         r"N-tile width bn=12"):
+        segment_spmm(**_spmm_args(), grid_m=1, bn=12)
+
+
+def test_segment_spmm_rejects_mismatched_schedule_arrays():
+    from repro.kernels.segment_spmm import segment_spmm
+    args = _spmm_args()
+    args["seg_write"] = jnp.asarray(np.array([0, 1, 1], np.int32))
+    with pytest.raises(ValueError, match=r"seg_write has shape \(3,\), "
+                                         r"expected \(2,\)"):
+        segment_spmm(**args, grid_m=1, bn=16)
+
+
+def test_segment_spmm_rejects_bad_lane_and_unroll_combos():
+    from repro.kernels.segment_spmm import segment_spmm
+    with pytest.raises(ValueError, match=r"n_items=2 is not divisible by "
+                                         r"n_lanes=3"):
+        segment_spmm(**_spmm_args(), grid_m=1, bn=16, n_lanes=3)
+    with pytest.raises(ValueError, match=r"lane length 1 is not divisible "
+                                         r"by unroll=2"):
+        segment_spmm(**_spmm_args(), grid_m=1, bn=16, n_lanes=2, unroll=2)
+
+
+def test_segment_spmm_rejects_bad_rhs_k():
+    from repro.kernels.segment_spmm import segment_spmm
+    args = _spmm_args()
+    args["b_dense"] = jnp.ones((12, 16), jnp.float32)
+    with pytest.raises(ValueError, match=r"rhs K=12 is not a multiple"):
+        segment_spmm(**args, grid_m=1, bn=16)
+
+
+def test_segment_kernels_reject_bad_scale_shapes():
+    from repro.kernels.segment_spmm import segment_spmm
+    args = _spmm_args()
+    with pytest.raises(ValueError, match=r"a_scales has shape \(2,\), "
+                                         r"expected one fp32 scale"):
+        segment_spmm(**args, grid_m=1, bn=16,
+                     a_scales=jnp.ones((2,), jnp.float32))
 
 
 # ---------------------------------------------------------------------------
