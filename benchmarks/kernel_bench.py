@@ -13,7 +13,10 @@ interpret-mode wall time (median of ``--repeats`` interleaved warm calls),
 max error vs the dense oracle, modeled HBM traffic, and the LPT load
 imbalance.  The quant sweep runs the standard weight-bound case at
 fp32/int8/fp8 block storage and reports traffic-bytes ratios vs fp32 plus
-normalized max error vs the dense fp32 oracle (CI gates both).
+normalized max error vs the dense fp32 oracle (CI gates both).  The
+pipeline sweep checks the DMA-pipeline fetch contract (modeled fetch count
+== schedule fetch-flag count, exactly, both kernels) and tracks interpret
+wall time vs the non-pipelined baseline.
 """
 from __future__ import annotations
 
@@ -27,6 +30,7 @@ import jax.numpy as jnp
 
 from repro import api
 from repro.core.formats import BSR
+from repro.kernels.segment_spmm import segment_spmm
 
 from .common import Csv
 
@@ -161,6 +165,79 @@ def quant_sweep() -> dict:
     return out
 
 
+def pipeline_sweep(repeats: int = 12) -> dict:
+    """DMA-pipeline contract + wall time vs the non-pipelined baseline.
+
+    Two gates ride this section in CI:
+
+    * **fetch contract** — the traffic model's predicted A/B fetch counts
+      must equal the schedule's fetch-flag sums *exactly*, for both kernels
+      (the flags gate the in-kernel ``make_async_copy`` issues, so the
+      model's byte pricing is kernel reality, not an estimate);
+    * **wall time** — interpret-mode medians for the pipelined executor
+      path vs the legacy BlockSpec auto-pipeline (``pipeline=False``).
+      Interpret mode *emulates* every DMA and semaphore op sequentially, so
+      the pipelined path pays emulation overhead and the overlap win needs
+      real hardware — the ratio is tracked to catch pathological blowups,
+      not as a speedup claim.
+    """
+    rng = np.random.default_rng(2)
+    a = _balanced_bsr(rng)
+    bd = jnp.asarray(rng.standard_normal(
+        (LANE_CASE["shape"][1], LANE_CASE["n_cols"])).astype(np.float32))
+    want = a.to_dense() @ np.asarray(bd)
+    plan = api.plan_matmul(a, bd.shape, n_lanes=2)
+    tr = plan.traffic
+    out = {
+        "model_a_fetches": int(tr["a_fetches"]),
+        "flag_a_fetches": int(np.asarray(plan.a_fetch).sum()),
+        "model_b_fetches": int(tr["b_fetches"]),
+        "flag_b_fetches": int(np.asarray(plan.b_fetch).sum()),
+    }
+    # spgemm fetch contract (A and B block streams both flag-gated); dense
+    # enough that the symbolic intersection is guaranteed non-empty — an
+    # empty triple list would gate 0 == 0 and check nothing
+    ga = BSR.random(np.random.default_rng(4), (256, 256), (32, 32), 0.5)
+    gb = BSR.random(np.random.default_rng(5), (256, 256), (32, 32), 0.5)
+    gplan = api.plan_matmul(ga, gb, n_lanes=2)
+    gtr = gplan.traffic
+    out.update(
+        spgemm_model_a_fetches=int(gtr["a_fetches"]),
+        spgemm_flag_a_fetches=int(np.asarray(gplan.a_fetch).sum()),
+        spgemm_model_b_fetches=int(gtr["b_fetches"]),
+        spgemm_flag_b_fetches=int(np.asarray(gplan.b_fetch).sum()))
+
+    bn = LANE_CASE["bn"]
+    pip = jax.jit(lambda p, x: api.execute_plan(
+        p, x, bn=bn, backend="interpret"))
+
+    def legacy_call(p, x):
+        return segment_spmm(
+            p.lhs_blocks, p.slot_idx, p.m_idx, p.k_idx, p.seg_start,
+            p.seg_write, p.accum_prev, p.valid, x, grid_m=p.grid[0],
+            n_lanes=p.n_lanes, bn=bn, unroll=p.unroll, masked=p.has_pads,
+            interpret=True, pipeline=False)
+
+    leg = jax.jit(legacy_call)
+    out["max_err_pipelined"] = float(
+        np.abs(np.asarray(pip(plan, bd)) - want).max())
+    out["max_err_legacy"] = float(
+        np.abs(np.asarray(leg(plan, bd)) - want).max())
+    times = {"pipelined": [], "legacy": []}
+    for _ in range(repeats):
+        for name, fn in (("pipelined", pip), ("legacy", leg)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(plan, bd))
+            times[name].append((time.perf_counter() - t0) * 1e6)
+    for name, ts in times.items():
+        ts = sorted(ts)
+        out[f"{name}_us"] = ts[len(ts) // 2]
+        out[f"{name}_us_min"] = ts[0]
+    out["interpret_slowdown_vs_legacy"] = (
+        out["pipelined_us_min"] / out["legacy_us_min"])
+    return out
+
+
 def run(csv: Csv) -> dict:
     """CSV entry point for ``benchmarks.run`` (the figure-suite driver)."""
     ratios = traffic_sweep()
@@ -176,7 +253,12 @@ def run(csv: Csv) -> dict:
     for mode, row in quant.items():
         csv.add(f"kernel/spmm_quant_{mode}", row["traffic_total_bytes"],
                 f"max_err={row['max_err']:.2e}")
-    return {"traffic": ratios, "lanes": lanes, "quant": quant}
+    pipe = pipeline_sweep()
+    csv.add("kernel/spmm_pipeline_interpret", pipe["pipelined_us"],
+            f"legacy={pipe['legacy_us']:.0f}us;"
+            f"max_err={pipe['max_err_pipelined']:.2e}")
+    return {"traffic": ratios, "lanes": lanes, "quant": quant,
+            "pipeline": pipe}
 
 
 def main() -> None:
@@ -186,14 +268,18 @@ def main() -> None:
     args = ap.parse_args()
 
     result = {"traffic": traffic_sweep(), "lanes": lane_sweep(args.repeats),
-              "quant": quant_sweep(),
-              "lane_case": {k: str(v) for k, v in LANE_CASE.items()},
-              "quant_case": {k: str(v) for k, v in QUANT_CASE.items()},
+              "quant": quant_sweep(), "pipeline": pipeline_sweep(args.repeats),
+              # case configs as native JSON types (tuples become arrays) so
+              # trend tooling can compare run-to-run numerically — str(v)
+              # used to turn (512, 512) into an unparseable "(512, 512)"
+              "lane_case": LANE_CASE,
+              "quant_case": QUANT_CASE,
               "plan_cache": api.plan_cache_stats()}
     with open(args.out, "w") as f:
         json.dump(result, f, indent=2)
     print(json.dumps(result["lanes"], indent=2))
     print(json.dumps(result["quant"], indent=2))
+    print(json.dumps(result["pipeline"], indent=2))
     print(f"wrote {args.out}")
 
 

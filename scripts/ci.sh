@@ -83,11 +83,34 @@ for mode in ("int8", "fp8"):
 assert q["fp32"]["max_err"] < 1e-4, q["fp32"]
 assert q["int8"]["max_err"] < 5e-2, q["int8"]
 assert q["fp8"]["max_err"] < 1e-1, q["fp8"]
+# DMA pipeline: the traffic model's predicted fetch counts must equal the
+# schedule's fetch-flag sums EXACTLY.  The two sides implement the same
+# change-detection contract independently (model: _revisit_traffic's
+# per-item deltas; kernel gating: fetch_flags), so this catches drift in
+# either one — pad handling, lane starts, unroll.  Both kernels; the
+# spgemm case must carry real work (0 == 0 would check nothing).
+p = d["pipeline"]
+for kind in ("", "spgemm_"):
+    for stream in ("a", "b"):
+        model = p[f"{kind}model_{stream}_fetches"]
+        flags = p[f"{kind}flag_{stream}_fetches"]
+        assert model == flags, (kind, stream, model, flags)
+assert p["spgemm_model_b_fetches"] > 0, p
+assert p["max_err_pipelined"] < 1e-4, p
+# interpret wall time vs the non-pipelined baseline: emulated DMAs could
+# regress pathologically without parity breaking — keep the pipelined path
+# within a generous factor of the legacy auto-pipeline (it is currently
+# ~3x FASTER in interpret mode: two ANY operands emulate cheaper than
+# 2*unroll BlockSpec streams)
+assert p["pipelined_us_min"] <= 10 * p["legacy_us_min"], p
 print(f"kernel bench OK: interpret 1-lane {single:.0f}us, "
       f"best multi-lane {multi:.0f}us, "
       f"max_err {max(r['max_err'] for r in lanes.values()):.2e}, "
       f"int8 traffic {q['int8']['traffic_ratio_vs_fp32']:.2f}x smaller "
-      f"(err {q['int8']['max_err']:.2e})")
+      f"(err {q['int8']['max_err']:.2e}), "
+      f"pipeline fetch contract exact "
+      f"(a={p['flag_a_fetches']}, b={p['flag_b_fetches']}), "
+      f"pipelined {p['pipelined_us']:.0f}us vs legacy {p['legacy_us']:.0f}us")
 EOF
 
 echo "== tier-1 tests =="

@@ -102,9 +102,14 @@ def _run_spmm(plan: SegmentPlan, x: jax.Array, *, backend: str,
         plan.seg_write, plan.accum_prev, plan.valid, xp, grid_m=gm,
         n_lanes=plan.n_lanes, bn=bn_eff, unroll=plan.unroll,
         transpose_lhs=plan.transpose_lhs,
-        masked=(plan.n_lanes > 1 or plan.unroll > 1),
+        # mask exactly when the schedule carries valid=0 items — lane count
+        # and unroll are the wrong proxy: a single-lane unroll=1 schedule
+        # can legally carry pads (custom policies, hand-extended plans),
+        # and a multi-lane schedule that packs perfectly has none
+        masked=plan.has_pads,
         interpret=backend_interpret_flag(backend), out_dtype=out_dtype,
-        a_scales=scales)
+        a_scales=scales, a_fetch=plan.a_fetch, b_fetch=plan.b_fetch,
+        a_slot=plan.a_slot, b_slot=plan.b_slot)
     if pad:
         out = out[:, :n]
     return _mask_dead_rows(plan, out)
@@ -130,9 +135,11 @@ def _run_spgemm(plan: SegmentPlan, *, backend: str,
         plan.seg_start, plan.seg_write, plan.accum_prev, plan.valid,
         n_c_blocks=plan.n_out_blocks, n_lanes=plan.n_lanes,
         unroll=plan.unroll,
-        masked=(plan.n_lanes > 1 or plan.unroll > 1),
+        masked=plan.has_pads,   # see _run_spmm: pads, not lanes/unroll
         interpret=backend_interpret_flag(backend), out_dtype=out_dtype,
-        a_scales=plan.lhs_scales, b_scales=plan.rhs_scales)
+        a_scales=plan.lhs_scales, b_scales=plan.rhs_scales,
+        a_fetch=plan.a_fetch, b_fetch=plan.b_fetch,
+        a_slot=plan.a_slot, b_slot=plan.b_slot)
 
 
 def execute_plan(plan: SegmentPlan, rhs=None, *, bn: int = 512,

@@ -5,9 +5,10 @@ A plan freezes everything a Segment-dataflow matmul needs at run time:
 * **leaves** (device arrays): the block values (fp32, or a quantized
   payload plus per-block fp32 ``lhs_scales``/``rhs_scales``), the
   scalar-prefetch schedule arrays (``seg_start``/``seg_write``/
-  ``accum_prev``), per-item block coordinates, the row liveness mask, and —
-  when the plan was built with ``with_grad=True`` — a nested backward plan
-  for the transposed schedule;
+  ``accum_prev`` plus the DMA-pipeline ``a_fetch``/``b_fetch``/``a_slot``/
+  ``b_slot`` fetch schedule), per-item block coordinates, the row liveness
+  mask, and — when the plan was built with ``with_grad=True`` — a nested
+  backward plan for the transposed schedule;
 * **static aux data** (hashable python values): grid sizes, block shape,
   policy name, kind, the traffic estimate, and the pattern fingerprint.
 
@@ -40,6 +41,7 @@ _LEAF_FIELDS = (
     "a_idx", "b_idx", "c_idx",
     "slot_idx", "valid",
     "seg_start", "seg_write", "accum_prev",
+    "a_fetch", "b_fetch", "a_slot", "b_slot",
     "row_mask",
     "a_brow", "a_bcol", "b_brow", "b_bcol", "c_brow_arr", "c_bcol_arr",
     "grad_plan",
@@ -47,7 +49,7 @@ _LEAF_FIELDS = (
 _AUX_FIELDS = ("kind", "policy", "block_shape", "grid", "rhs_grid",
                "n_out_blocks", "traffic_items", "fingerprint", "backend",
                "n_lanes", "unroll", "transpose_lhs", "block_dtype",
-               "out_dtype")
+               "out_dtype", "has_pads")
 
 
 @dataclasses.dataclass(eq=False)   # array fields make generated __eq__ ambiguous
@@ -82,6 +84,10 @@ class SegmentPlan:
     transpose_lhs: bool = False                   # kernel contracts Aᵀ (bwd)
     block_dtype: str = "fp32"                     # "fp32" | "int8" | "fp8"
     out_dtype: Optional[str] = None               # dtype name | None=float32
+    # True when the lane-major schedule carries any valid=0 padding item —
+    # the executor masks pad contributions exactly when this is set (the
+    # conservative default keeps hand-built plans safe)
+    has_pads: bool = True
 
     # --- pytree leaves (device arrays; None where not applicable) ---
     lhs_blocks: Optional[jax.Array] = None
@@ -98,6 +104,12 @@ class SegmentPlan:
     seg_start: Optional[jax.Array] = None
     seg_write: Optional[jax.Array] = None
     accum_prev: Optional[jax.Array] = None
+    # DMA pipeline schedule: per-item fetch flags + resident ring-buffer
+    # slots for the A and B operand streams (see core.schedule.fetch_flags)
+    a_fetch: Optional[jax.Array] = None
+    b_fetch: Optional[jax.Array] = None
+    a_slot: Optional[jax.Array] = None
+    b_slot: Optional[jax.Array] = None
     row_mask: Optional[jax.Array] = None
     a_brow: Optional[jax.Array] = None
     a_bcol: Optional[jax.Array] = None

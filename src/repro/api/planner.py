@@ -41,9 +41,10 @@ from repro.core.formats import (BSR, QUANT_DTYPES, QuantizedBlocks,
                                 quantize_blocks)
 from repro.core.policies import get_policy
 from repro.core.schedule import (LaneLayout, build_spgemm_schedule,
-                                 build_spmm_schedule, finalize_schedule,
-                                 lane_select, lane_traffic_spgemm,
-                                 lane_traffic_spmm, partition_lanes)
+                                 build_spmm_schedule, fetch_flags,
+                                 finalize_schedule, lane_select,
+                                 lane_traffic_spgemm, lane_traffic_spmm,
+                                 partition_lanes)
 
 from .backends import resolve_backend
 from .plan import SPGEMM, SPMM, SegmentPlan
@@ -103,8 +104,7 @@ def _quantize_a_traffic(basis: dict, block_dtype: str, bm: int,
         return basis
     itemsize = QUANT_DTYPES[block_dtype].itemsize
     out = dict(basis)
-    a_fetches = basis["a_bytes"] / float(bm * bk * 4)
-    out["a_bytes"] = a_fetches * (bm * bk * itemsize + 4)
+    out["a_bytes"] = basis["a_fetches"] * (bm * bk * itemsize + 4)
     out["total"] = out["a_bytes"] + out["b_bytes"] + out["c_bytes"]
     return out
 
@@ -116,8 +116,7 @@ def _quantize_spgemm_traffic(traffic: dict, block_dtype: str, bm: int,
         return traffic
     itemsize = QUANT_DTYPES[block_dtype].itemsize
     out = dict(traffic)
-    a_fetches = traffic["a_bytes"] / float(bm * bk * 4)
-    out["a_bytes"] = a_fetches * (bm * bk * itemsize + 4)
+    out["a_bytes"] = traffic["a_fetches"] * (bm * bk * itemsize + 4)
     out["b_bytes"] = traffic["b_fetches"] * (bk * bn * itemsize + 4)
     out["total"] = out["a_bytes"] + out["b_bytes"] + out["c_bytes"]
     return out
@@ -210,6 +209,22 @@ def _lane_flags(layout: LaneLayout, seg_start, seg_write, accum_prev) -> dict:
         valid=layout.valid.reshape(-1).astype(np.int32))
 
 
+def _fetch_schedule(layout: LaneLayout, a_stream: np.ndarray,
+                    b_stream: np.ndarray, unroll: int) -> dict:
+    """DMA-pipeline fetch flags + ring-buffer slots for both operand streams.
+
+    ``a_stream``/``b_stream`` are the *lane-major* operand index arrays the
+    kernel addresses HBM with (A block slot, and ``k`` / B block slot).
+    The ring depth is ``2·unroll`` — one slot set computing, one filling —
+    matching the kernels' scratch allocation.
+    """
+    valid = layout.valid.reshape(-1)
+    depth = 2 * unroll
+    a_f, a_s = fetch_flags(a_stream, valid, layout.n_lanes, depth=depth)
+    b_f, b_s = fetch_flags(b_stream, valid, layout.n_lanes, depth=depth)
+    return dict(a_fetch=a_f, b_fetch=b_f, a_slot=a_s, b_slot=b_s)
+
+
 def _flag_leaves(flags: dict) -> dict:
     """jnp device leaves for a plan's flag arrays (one upload, at the end of
     the build — never a device→host round trip on the build path)."""
@@ -223,11 +238,16 @@ def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
     sched = build_spmm_schedule(a, policy=policy, fold_len=fold_len)
     fin = finalize_schedule(sched.seg_start, sched.m, n_slots=sched.n_m_blocks)
     bm, bk = a.block_shape
-    layout = partition_lanes(sched.m, n_lanes, unroll=unroll, policy=policy)
+    layout = partition_lanes(sched.m, n_lanes, unroll=unroll, policy=policy,
+                             seg_start=sched.seg_start,
+                             seg_write=sched.seg_write,
+                             accum_prev=fin.accum_prev)
     lane_m = lane_select(layout, sched.m)
     lane_k = lane_select(layout, sched.k)
+    lane_slot = lane_select(layout, sched.a_idx)
     flags = _lane_flags(layout, sched.seg_start, sched.seg_write,
                         fin.accum_prev)
+    fetch = _fetch_schedule(layout, lane_slot, lane_k, unroll)
     basis = _quantize_a_traffic(lane_traffic_spmm(
         lane_m, lane_k, flags["seg_start"],
         layout.valid.reshape(-1), layout.n_lanes, bm, bk, 1, unroll=unroll),
@@ -250,12 +270,17 @@ def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
         t_fin = finalize_schedule(t_sched.seg_start, t_sched.m,
                                   n_slots=t_sched.n_m_blocks)
         t_layout = partition_lanes(t_sched.m, n_lanes, unroll=unroll,
-                                   policy=policy)
+                                   policy=policy,
+                                   seg_start=t_sched.seg_start,
+                                   seg_write=t_sched.seg_write,
+                                   accum_prev=t_fin.accum_prev)
         t_slot = t_order[t_sched.a_idx.astype(np.int64)]
         t_lane_m = lane_select(t_layout, t_sched.m)
         t_lane_k = lane_select(t_layout, t_sched.k)
+        t_lane_slot = lane_select(t_layout, t_slot)
         t_flags = _lane_flags(t_layout, t_sched.seg_start, t_sched.seg_write,
                               t_fin.accum_prev)
+        t_fetch = _fetch_schedule(t_layout, t_lane_slot, t_lane_k, unroll)
         grad_basis = _quantize_a_traffic(lane_traffic_spmm(
             t_lane_m, t_lane_k, t_flags["seg_start"],
             t_layout.valid.reshape(-1), t_layout.n_lanes, bk, bm, 1,
@@ -269,13 +294,13 @@ def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
             fingerprint=fingerprint + ":grad",
             block_dtype=block_dtype,
             n_lanes=t_layout.n_lanes, unroll=unroll, transpose_lhs=True,
+            has_pads=bool(not t_layout.valid.all()),
             m_idx=jnp.asarray(t_lane_m.astype(np.int32)),
             k_idx=jnp.asarray(t_lane_k.astype(np.int32)),
-            slot_idx=jnp.asarray(lane_select(layout=t_layout, arr=t_slot)
-                                 .astype(np.int32)),
+            slot_idx=jnp.asarray(t_lane_slot.astype(np.int32)),
             row_mask=jnp.asarray(t_fin.row_mask),
             a_brow=jnp.asarray(a.brow), a_bcol=jnp.asarray(a.bcol),
-            **_flag_leaves(t_flags))
+            **_flag_leaves(t_flags), **_flag_leaves(t_fetch))
 
     plan = SegmentPlan(
         kind=SPMM, policy=policy, block_shape=(bm, bk),
@@ -284,13 +309,13 @@ def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
         traffic_items=(),   # re-priced per realize from traffic_basis
         fingerprint=fingerprint, block_dtype=block_dtype,
         n_lanes=layout.n_lanes, unroll=unroll,
+        has_pads=bool(not layout.valid.all()),
         m_idx=jnp.asarray(lane_m.astype(np.int32)),
         k_idx=jnp.asarray(lane_k.astype(np.int32)),
-        slot_idx=jnp.asarray(lane_select(layout, sched.a_idx)
-                             .astype(np.int32)),
+        slot_idx=jnp.asarray(lane_slot.astype(np.int32)),
         row_mask=jnp.asarray(fin.row_mask),
         a_brow=jnp.asarray(a.brow), a_bcol=jnp.asarray(a.bcol),
-        grad_plan=grad_plan, **_flag_leaves(flags))
+        grad_plan=grad_plan, **_flag_leaves(flags), **_flag_leaves(fetch))
     return _PlanTemplate(plan=plan, traffic_basis=basis,
                          grad_traffic_basis=grad_basis)
 
@@ -304,12 +329,15 @@ def _build_spgemm_template(a: BSR, b: BSR, policy: str,
     bm, bk = a.block_shape
     bn = b.block_shape[1]
     layout = partition_lanes(sched.c_idx, n_lanes, unroll=unroll,
-                             policy=policy)
+                             policy=policy, seg_start=sched.seg_start,
+                             seg_write=sched.seg_write,
+                             accum_prev=fin.accum_prev)
     lane_a = lane_select(layout, sched.a_idx)
     lane_b = lane_select(layout, sched.b_idx)
     lane_c = lane_select(layout, sched.c_idx)
     flags = _lane_flags(layout, sched.seg_start, sched.seg_write,
                         fin.accum_prev)
+    fetch = _fetch_schedule(layout, lane_a, lane_b, unroll)
     traffic = _quantize_spgemm_traffic(lane_traffic_spgemm(
         lane_a, lane_b, lane_c, flags["seg_start"],
         layout.valid.reshape(-1), layout.n_lanes, bm, bk, bn, unroll=unroll),
@@ -321,13 +349,15 @@ def _build_spgemm_template(a: BSR, b: BSR, policy: str,
         traffic_items=_freeze_traffic(traffic),
         fingerprint=fingerprint, block_dtype=block_dtype,
         n_lanes=layout.n_lanes, unroll=unroll,
+        has_pads=bool(not layout.valid.all()),
         a_idx=jnp.asarray(lane_a.astype(np.int32)),
         b_idx=jnp.asarray(lane_b.astype(np.int32)),
         c_idx=jnp.asarray(lane_c.astype(np.int32)),
         a_brow=jnp.asarray(a.brow), a_bcol=jnp.asarray(a.bcol),
         b_brow=jnp.asarray(b.brow), b_bcol=jnp.asarray(b.bcol),
         c_brow_arr=jnp.asarray(sched.c_brow),
-        c_bcol_arr=jnp.asarray(sched.c_bcol), **_flag_leaves(flags))
+        c_bcol_arr=jnp.asarray(sched.c_bcol),
+        **_flag_leaves(flags), **_flag_leaves(fetch))
     return _PlanTemplate(plan=plan)
 
 

@@ -19,8 +19,8 @@ from .policies import (SchedulePolicy, available_policies, get_policy,
                        register_policy, unregister_policy)
 from .schedule import (LaneLayout, SegmentFinalization, SpgemmSchedule,
                        SpmmSchedule, build_spgemm_schedule,
-                       build_spmm_schedule, finalize_schedule, lane_select,
-                       lane_traffic_spgemm, lane_traffic_spmm,
+                       build_spmm_schedule, fetch_flags, finalize_schedule,
+                       lane_select, lane_traffic_spgemm, lane_traffic_spmm,
                        partition_lanes, shard_schedule,
                        spgemm_schedule_traffic, spmm_schedule_traffic,
                        symbolic_spgemm)
@@ -34,7 +34,8 @@ __all__ = [
     "SchedulePolicy", "available_policies", "get_policy", "register_policy",
     "unregister_policy",
     "LaneLayout", "SegmentFinalization", "SpgemmSchedule", "SpmmSchedule",
-    "build_spgemm_schedule", "build_spmm_schedule", "finalize_schedule",
+    "build_spgemm_schedule", "build_spmm_schedule", "fetch_flags",
+    "finalize_schedule",
     "lane_select", "lane_traffic_spgemm", "lane_traffic_spmm",
     "partition_lanes", "shard_schedule", "spgemm_schedule_traffic",
     "spmm_schedule_traffic", "symbolic_spgemm",

@@ -395,7 +395,8 @@ class LaneLayout:
 
 
 def partition_lanes(owner: np.ndarray, n_lanes: int, *, unroll: int = 1,
-                    policy: str = "segment") -> LaneLayout:
+                    policy: str = "segment", seg_start=None, seg_write=None,
+                    accum_prev=None) -> LaneLayout:
     """Split a schedule's item list into ``n_lanes`` balanced lanes.
 
     ``owner[i]`` is the output-tile id of schedule item ``i`` (block row for
@@ -412,6 +413,16 @@ def partition_lanes(owner: np.ndarray, n_lanes: int, *, unroll: int = 1,
 
     ``n_lanes`` is clamped to the number of owner groups — a lane with no
     real work would flush an undefined output buffer.
+
+    When the schedule's flag arrays (``seg_start``/``seg_write``/
+    ``accum_prev``, in original schedule order) are passed, the partition is
+    additionally validated: every ``accum_prev=1`` item read-modify-writes
+    its output tile, so a ``seg_write`` to that tile must already have
+    happened *earlier in the same lane* — otherwise the kernel reads an
+    output buffer nothing ever wrote, a silent-wrong-answer class this turns
+    into a named ``ValueError``.  Built-in policies always satisfy the
+    invariant (owner groups are atomic per lane, in schedule order); the
+    check guards custom-registered policies and hand-built schedules.
     """
     if n_lanes < 1:
         raise ValueError(f"n_lanes must be >= 1, got {n_lanes}")
@@ -446,6 +457,8 @@ def partition_lanes(owner: np.ndarray, n_lanes: int, *, unroll: int = 1,
     perm = np.full((eff, lane_len), -1, dtype=np.int64)
     for li, l in enumerate(lanes):
         perm[li, :len(l)] = l
+    if accum_prev is not None:
+        _validate_lane_accum(perm, owner, seg_start, seg_write, accum_prev)
     # forward-fill pads with the last real item of their lane (every lane
     # starts with a real item: pads only follow groups)
     pos = np.maximum.accumulate(
@@ -457,6 +470,93 @@ def partition_lanes(owner: np.ndarray, n_lanes: int, *, unroll: int = 1,
     stats.pop("loads", None)
     return LaneLayout(perm=perm, filled=filled, valid=perm >= 0,
                       n_lanes=eff, lane_len=lane_len, stats=stats)
+
+
+def _validate_lane_accum(perm: np.ndarray, owner: np.ndarray, seg_start,
+                         seg_write, accum_prev) -> None:
+    """Every ``accum_prev=1`` item must find its output tile already written
+    (``seg_write=1``) earlier in the *same* lane — the kernel's ``_load``
+    branch reads the C buffer, and an unwritten slot holds garbage."""
+    accum_prev = np.asarray(accum_prev)
+    seg_start = (np.ones_like(accum_prev) if seg_start is None
+                 else np.asarray(seg_start))
+    seg_write = (np.zeros_like(accum_prev) if seg_write is None
+                 else np.asarray(seg_write))
+    for arr, name in ((seg_start, "seg_start"), (seg_write, "seg_write"),
+                      (accum_prev, "accum_prev")):
+        if arr.shape != owner.shape:
+            raise ValueError(f"{name} has shape {arr.shape}, expected "
+                             f"{owner.shape} to match owner")
+    n_owner = int(owner.max()) + 1 if owner.size else 0
+    big = np.iinfo(np.int64).max
+    for li in range(perm.shape[0]):
+        items = perm[li][perm[li] >= 0]
+        o = owner[items]
+        pos = np.arange(items.size, dtype=np.int64)
+        # first RMW read vs first write per output tile, vectorized — this
+        # runs on every plan build, so no per-item Python loop
+        reads = (seg_start[items] == 1) & (accum_prev[items] == 1)
+        writes = seg_write[items] == 1
+        first_read = np.full(n_owner, big)
+        np.minimum.at(first_read, o[reads], pos[reads])
+        first_write = np.full(n_owner, big)
+        np.minimum.at(first_write, o[writes], pos[writes])
+        bad = np.nonzero((first_read < big) & (first_write >= first_read))[0]
+        if bad.size:
+            tile = int(bad[0])
+            item = int(items[first_read[tile]])
+            raise ValueError(
+                f"schedule item {item} (output tile {tile}, lane {li}) has "
+                f"accum_prev=1 but no earlier seg_write to that tile in "
+                f"the same lane — the kernel would read-modify-write an "
+                f"output buffer nothing wrote; the item's segment chain "
+                f"must follow its tile's first write within one lane")
+
+
+def fetch_flags(stream: np.ndarray, valid: np.ndarray, n_lanes: int,
+                depth: int = 2) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-item DMA fetch flags + ring-buffer slots for one operand stream.
+
+    ``stream`` is a flattened lane-major array of operand indices (block
+    slot for A, contraction block row ``k`` or B block slot for B);
+    ``valid`` marks real items.  Returns ``(fetch, slot)`` int32 arrays:
+
+    * ``fetch[i]`` is 1 exactly when the pipelined kernel must issue an
+      async copy for item ``i``'s tile: the item is valid AND its operand
+      index differs from the previous item's *within the same lane* (a
+      lane's first item always fetches — lane cuts and grid-pass restarts
+      never inherit residency; pads fetch nothing, their forward-filled
+      index re-addresses the resident tile);
+    * ``slot[i]`` is the ring-buffer slot where item ``i``'s tile resides:
+      the ``depth``-slot ring advances one slot per fetch, so a reused tile
+      is always the most recently fetched one.  ``depth`` must be at least
+      ``2 * unroll`` for a kernel that issues one grid step ahead while
+      ``unroll`` items compute per step (2 for the plain double buffer).
+
+    The kernels gate every async copy on these flags; the traffic model
+    implements the same change-detection contract independently
+    (:func:`_revisit_traffic`), and CI asserts the two counts agree exactly
+    — a drift bug in either implementation trips the gate.
+    """
+    if depth < 2:
+        raise ValueError(f"ring-buffer depth must be >= 2, got {depth}")
+    stream = np.asarray(stream)
+    valid = np.asarray(valid).astype(bool)
+    if stream.shape != valid.shape:
+        raise ValueError(f"stream {stream.shape} and valid {valid.shape} "
+                         f"must have matching shapes")
+    if stream.size % max(n_lanes, 1) != 0:
+        raise ValueError(f"n_items={stream.size} is not divisible by "
+                         f"n_lanes={n_lanes}")
+    s2 = stream.reshape(n_lanes, -1)
+    v2 = valid.reshape(n_lanes, -1)
+    delta = np.ones_like(s2, dtype=bool)
+    if s2.shape[1] > 1:
+        delta[:, 1:] = s2[:, 1:] != s2[:, :-1]
+    fetch = delta & v2
+    slot = np.maximum(np.cumsum(fetch, axis=1) - 1, 0) % depth
+    return (fetch.reshape(-1).astype(np.int32),
+            slot.reshape(-1).astype(np.int32))
 
 
 def lane_select(layout: LaneLayout, arr: np.ndarray,
@@ -482,32 +582,54 @@ def lane_select(layout: LaneLayout, arr: np.ndarray,
 
 
 def _revisit_traffic(fetch_streams, owner, seg_start, valid, n_lanes,
-                     c_tile_bytes, unroll: int = 1):
+                     c_tile_bytes, unroll: int = 1, pipeline: bool = True):
     """Shared revisiting-model core over flattened lane-major arrays.
 
     ``fetch_streams`` is a list of ``(arr, tile_bytes, always)`` operand
     streams: an operand tile is fetched when its index differs from the
-    previous step's *within the same lane* (lane boundaries always re-fetch:
+    previous item's *within the same lane* (lane boundaries always re-fetch:
     the SELECTA boundary-reuse chain is broken where a schedule is cut into
-    lanes), or on every valid step when ``always``.  With ``unroll > 1``
-    the kernels bind each of the G items of a grid step to an *independent*
-    BlockSpec stream (index maps strided by ``unroll``), so Pallas only
-    revisits position ``g`` of step ``s-1`` from position ``g`` of step
-    ``s`` — the model compares indices per stream, never across the items
-    inside one step.  C tiles are written once per segment head and read
-    back on owner revisits (folded continuations / non-contiguous
-    re-starts).  Pads (``valid == 0``) move no data.
+    lanes), or on every valid item when ``always``.
+
+    ``pipeline=True`` (the default — matching the kernels' explicit DMA
+    pipeline) counts a fetch wherever an operand index differs from the
+    previous item's within the lane, exactly the contract
+    :func:`fetch_flags` compiles into the kernels' copy-gating flags.  The
+    two are deliberately *independent implementations* of that contract —
+    CI asserts their counts agree exactly, so a drift bug in either one
+    (pad handling, lane starts, unroll) trips the gate instead of
+    cancelling out.  Per-item adjacency carries reuse across every
+    consecutive pair, ``unroll`` included.  ``pipeline=False`` models the
+    legacy BlockSpec auto-pipeline, where each of the G items of an
+    unrolled grid step binds an *independent* stream (index maps strided by
+    ``unroll``): revisit credit only exists between position ``g`` of
+    consecutive steps, never across the items inside one step.
+
+    Counts are per (lane, output-tile) pass: B/C bytes stay exact across a
+    multi-N-tile SpMM grid (each pass copies one ``bn``-wide slice; summed
+    over passes that is the priced row-block), while A-tile bytes are
+    priced once per item even though the kernel re-issues A copies each
+    pass — the same N-independent idealization the auto-pipeline model
+    used.  C tiles are written once per segment head and read back on
+    owner revisits (folded continuations / non-contiguous re-starts).
+    Pads (``valid == 0``) move no data.
     """
     valid = np.asarray(valid, dtype=bool)
     fetches = []
     for arr, tile_bytes, always in fetch_streams:
-        a3 = np.asarray(arr).reshape(n_lanes, -1, unroll)
-        delta = np.ones_like(a3, dtype=bool)
-        if a3.shape[1] > 1:
-            delta[:, 1:, :] = a3[:, 1:, :] != a3[:, :-1, :]
         if always:
             n_fetch = int(valid.sum())
+        elif pipeline:
+            a2 = np.asarray(arr).reshape(n_lanes, -1)
+            delta = np.ones_like(a2, dtype=bool)
+            if a2.shape[1] > 1:
+                delta[:, 1:] = a2[:, 1:] != a2[:, :-1]
+            n_fetch = int((delta.reshape(-1) & valid).sum())
         else:
+            a3 = np.asarray(arr).reshape(n_lanes, -1, unroll)
+            delta = np.ones_like(a3, dtype=bool)
+            if a3.shape[1] > 1:
+                delta[:, 1:, :] = a3[:, 1:, :] != a3[:, :-1, :]
             n_fetch = int((delta.reshape(-1) & valid).sum())
         fetches.append((n_fetch, n_fetch * tile_bytes))
     seg_heads = np.nonzero(np.asarray(seg_start) & valid)[0]
@@ -525,41 +647,46 @@ def _revisit_traffic(fetch_streams, owner, seg_start, valid, n_lanes,
 
 def lane_traffic_spmm(m, k, seg_start, valid, n_lanes: int, bm: int, bk: int,
                       n_cols: int, bytes_per_el: int = 4,
-                      unroll: int = 1) -> dict:
+                      unroll: int = 1, pipeline: bool = True) -> dict:
     """Revisiting-model HBM bytes for the lane-parallel SpMM kernel.
 
     Arrays are flattened lane-major (``n_lanes * lane_len``).  A tiles are
-    fetched once per valid item; a B row-block is fetched when ``k`` changes
-    within a lane *per unroll stream* (and always at a lane start — lane
-    cuts break the boundary-k chaining the Segment order set up); C tiles
-    follow the segment write/revisit rule, with owners confined to single
-    lanes.
+    fetched once per valid item (every item is a distinct nonzero block); a
+    B row-block is fetched when ``k`` changes within a lane (and always at
+    a lane start — lane cuts break the boundary-k chaining the Segment
+    order set up); C tiles follow the segment write/revisit rule, with
+    owners confined to single lanes.  ``pipeline`` selects the explicit-DMA
+    fetch-flag accounting (default, matching the kernels) vs the legacy
+    per-BlockSpec-stream model (see :func:`_revisit_traffic`).
     """
     fetches, c_segments, c_bytes = _revisit_traffic(
         [(k, 0, True), (k, bk * n_cols * bytes_per_el, False)],
         m, seg_start, valid, n_lanes, bm * n_cols * bytes_per_el,
-        unroll=unroll)
-    a_bytes = fetches[0][0] * bm * bk * bytes_per_el
+        unroll=unroll, pipeline=pipeline)
+    a_fetches = fetches[0][0]
+    a_bytes = a_fetches * bm * bk * bytes_per_el
     b_fetches, b_bytes = fetches[1]
     total = a_bytes + b_bytes + c_bytes
     return dict(a_bytes=a_bytes, b_bytes=b_bytes, c_bytes=c_bytes, total=total,
-                b_fetches=b_fetches, c_segments=c_segments)
+                a_fetches=a_fetches, b_fetches=b_fetches,
+                c_segments=c_segments)
 
 
 def lane_traffic_spgemm(a_idx, b_idx, c_idx, seg_start, valid, n_lanes: int,
                         bm: int, bk: int, bn: int, bytes_per_el: int = 4,
-                        unroll: int = 1) -> dict:
+                        unroll: int = 1, pipeline: bool = True) -> dict:
     """Revisiting-model HBM bytes for the lane-parallel SpGEMM kernel."""
     fetches, c_segments, c_bytes = _revisit_traffic(
         [(a_idx, bm * bk * bytes_per_el, False),
          (b_idx, bk * bn * bytes_per_el, False)],
         c_idx, seg_start, valid, n_lanes, bm * bn * bytes_per_el,
-        unroll=unroll)
-    _, a_bytes = fetches[0]
+        unroll=unroll, pipeline=pipeline)
+    a_fetches, a_bytes = fetches[0]
     b_fetches, b_bytes = fetches[1]
     total = a_bytes + b_bytes + c_bytes
     return dict(a_bytes=a_bytes, b_bytes=b_bytes, c_bytes=c_bytes, total=total,
-                b_fetches=b_fetches, c_segments=c_segments)
+                a_fetches=a_fetches, b_fetches=b_fetches,
+                c_segments=c_segments)
 
 
 def spmm_schedule_traffic(sched: SpmmSchedule, bm: int, bk: int, n_cols: int,

@@ -4,11 +4,20 @@ Two-phase TPU adaptation of SEGMENTBC (§III-B): the *symbolic* phase
 (``repro.core.schedule.symbolic_spgemm``) computes C's block pattern ahead of
 time — the V-space becomes a static compressed coordinate list at block
 granularity — and this *numeric* kernel executes the (m, k, n) block triples
-in Segment order:
+in Segment order through an **explicit double-buffered DMA pipeline**: both
+operand block arrays live in HBM (``pltpu.ANY`` refs) and the kernel issues
+``pltpu.make_async_copy`` for triple *i+1*'s A/B tiles into ``2·unroll``-slot
+VMEM ring buffers while triple *i* runs on the MXU, waiting only at
+consumption:
 
+* per-item ``a_fetch``/``b_fetch`` flags (``repro.core.schedule.fetch_flags``
+  — the same arrays the traffic model prices, so predicted fetch counts are
+  kernel reality) gate every copy: segment-to-segment chaining that reuses
+  boundary B blocks (SELECTA) skips the copy and reads the resident ring
+  slot (``a_slot``/``b_slot``), pads move no data, a lane's first triple
+  always fetches;
 * triples of the same C block form contiguous segments (ordered accumulation
   in VMEM, written back once — the merge network's in-place reduction);
-* segment-to-segment chaining reuses boundary B blocks (SELECTA);
 * folded continuations (``accum_prev``) read-modify-write their C block —
   temporal folding's partial-sum merge.
 
@@ -17,8 +26,12 @@ the triple list is cut into load-balanced lanes at C-segment boundaries
 (``repro.core.schedule.partition_lanes``; a C slot never spans lanes), so
 independent output chains run concurrently.  Every operand is selected by
 scalar-prefetched index arrays (the ahead-of-time IPM) directly in original
-BSR storage order; ``unroll`` executes several same-C-slot triples per grid
-step.  ``valid=0`` marks lane-padding no-ops (contribution masked out).
+BSR storage order; each grid step executes ``unroll`` same-C-slot triples
+against the resident ring slots.  ``valid=0`` marks lane-padding no-ops
+(contribution masked out).  Quantized per-block scales are gathered per item
+and stream as per-step VMEM vectors (one vector load per step instead of
+``unroll`` serialized SMEM scalar reads).  ``pipeline=False`` keeps the
+legacy BlockSpec auto-pipeline as a benchmark baseline.
 """
 from __future__ import annotations
 
@@ -30,11 +43,11 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from .compat import CompilerParams
-from .segment_spmm import validate_schedule_args
+from .segment_spmm import resolve_pipeline, validate_schedule_args
 
 
-def _make_kernel(lane_len: int, unroll: int, masked: bool, quant_a: bool,
-                 quant_b: bool):
+def _make_legacy_kernel(lane_len: int, unroll: int, masked: bool,
+                        quant_a: bool, quant_b: bool):
     def _kernel(a_idx, b_idx, c_idx, seg_start, seg_write, accum_prev,
                 valid, *refs):
         if quant_a:
@@ -81,13 +94,105 @@ def _make_kernel(lane_len: int, unroll: int, masked: bool, quant_a: bool,
     return _kernel
 
 
+def _make_pipeline_kernel(lane_len: int, unroll: int, masked: bool,
+                          quant_a: bool, quant_b: bool):
+    def _kernel(a_idx, b_idx, c_idx, seg_start, seg_write, accum_prev,
+                valid, a_fetch, b_fetch, a_slot, b_slot, *refs):
+        a_hbm, b_hbm, refs = refs[0], refs[1], refs[2:]
+        if quant_a:
+            a_scale_ref, refs = refs[0], refs[1:]
+        if quant_b:
+            b_scale_ref, refs = refs[0], refs[1:]
+        out, acc, a_buf, b_buf, a_sem, b_sem = refs
+        # grid coordinates are read once here: pl.program_id must not be
+        # bound inside a pl.when branch (interpret mode only substitutes it
+        # in the top-level kernel jaxpr)
+        s = pl.program_id(1)
+        n_steps = pl.num_programs(1)
+        lane_base = pl.program_id(0) * lane_len
+        base = lane_base + s * unroll
+
+        def a_copy(i, slot):
+            return pltpu.make_async_copy(
+                a_hbm.at[a_idx[i]], a_buf.at[slot], a_sem.at[slot])
+
+        def b_copy(i, slot):
+            return pltpu.make_async_copy(
+                b_hbm.at[b_idx[i]], b_buf.at[slot], b_sem.at[slot])
+
+        def issue(i):
+            @pl.when(a_fetch[i] == 1)
+            def _():
+                a_copy(i, a_slot[i]).start()
+
+            @pl.when(b_fetch[i] == 1)
+            def _():
+                b_copy(i, b_slot[i]).start()
+
+        # pass prologue + issue-one-step-ahead pipeline (see segment_spmm)
+        @pl.when(s == 0)
+        def _prologue():
+            for g in range(unroll):
+                issue(lane_base + g)
+
+        @pl.when(s + 1 < n_steps)
+        def _pipeline():
+            for g in range(unroll):
+                issue(base + unroll + g)
+
+        for g in range(unroll):
+            i = base + g
+
+            @pl.when(seg_start[i] == 1)
+            def _init(i=i):
+                @pl.when(accum_prev[i] == 1)
+                def _load():
+                    acc[...] = out[0].astype(jnp.float32)
+
+                @pl.when(accum_prev[i] == 0)
+                def _zero():
+                    acc[...] = jnp.zeros_like(acc)
+
+            @pl.when(a_fetch[i] == 1)
+            def _wait_a(i=i):
+                a_copy(i, a_slot[i]).wait()
+
+            @pl.when(b_fetch[i] == 1)
+            def _wait_b(i=i):
+                b_copy(i, b_slot[i]).wait()
+
+            contrib = jax.lax.dot_general(
+                a_buf[a_slot[i]].astype(jnp.float32),
+                b_buf[b_slot[i]].astype(jnp.float32),
+                dimension_numbers=(((1,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            # per-block scales are scalar tile factors — applying them to
+            # the fp32 product (after the dot, before accumulation) is
+            # exact; the step's scales arrive as one VMEM vector each
+            if quant_a:
+                contrib = contrib * a_scale_ref[0, g]
+            if quant_b:
+                contrib = contrib * b_scale_ref[0, g]
+            if masked:
+                contrib = jnp.where(valid[i] == 1, contrib, 0.0)
+            acc[...] += contrib
+
+            @pl.when(seg_write[i] == 1)
+            def _write(i=i):
+                out[0] = acc[...].astype(out.dtype)
+
+    return _kernel
+
+
 @functools.partial(jax.jit, static_argnames=(
-    "n_c_blocks", "n_lanes", "unroll", "masked", "interpret", "out_dtype"))
+    "n_c_blocks", "n_lanes", "unroll", "masked", "interpret", "out_dtype",
+    "pipeline"))
 def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
                    seg_write, accum_prev, valid, *, n_c_blocks: int,
                    n_lanes: int = 1, unroll: int = 1, masked: bool = True,
                    interpret: bool = False, out_dtype=jnp.float32,
-                   a_scales=None, b_scales=None):
+                   a_scales=None, b_scales=None, a_fetch=None, b_fetch=None,
+                   a_slot=None, b_slot=None, pipeline=None):
     """Numeric SpGEMM phase.
 
     Args:
@@ -101,8 +206,14 @@ def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
       n_c_blocks: number of symbolic C blocks.
       n_lanes/unroll: lane-parallel grid shape (see module docstring).
       a_scales/b_scales: per-block fp32 dequantization scales
-        (``(na,)`` / ``(nb,)``) riding the scalar-prefetch path; applied to
-        the fp32 accumulator via the same ``a_idx``/``b_idx`` indirection.
+        (``(na,)`` / ``(nb,)``), gathered per item and streamed as per-step
+        VMEM vectors (pipelined) or read from SMEM (legacy).
+      a_fetch/b_fetch: (n_items,) int32 DMA fetch flags — 1 where the item
+        must copy its A/B tile from HBM, 0 where the resident ring slot is
+        reused (see ``repro.core.schedule.fetch_flags``).
+      a_slot/b_slot: (n_items,) int32 resident ring-buffer slot per item.
+      pipeline: True = explicit DMA pipeline (requires the four fetch
+        arrays), False = legacy BlockSpec auto-pipeline, None = auto.
     Returns:
       (n_c_blocks, bm, bn) C blocks, ordered as the symbolic pattern.
     """
@@ -117,14 +228,71 @@ def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
         raise ValueError(
             f"b_scales has shape {b_scales.shape}, expected one fp32 scale "
             f"per stored block ({b_blocks.shape[0]},)")
+    pipeline = resolve_pipeline(pipeline, (a_fetch, b_fetch, a_slot, b_slot))
     validate_schedule_args(
         n_items, n_lanes, unroll,
         {"a_idx": a_idx, "b_idx": b_idx, "c_idx": c_idx,
-         "seg_write": seg_write, "accum_prev": accum_prev, "valid": valid})
+         "seg_write": seg_write, "accum_prev": accum_prev, "valid": valid,
+         "a_fetch": a_fetch, "b_fetch": b_fetch, "a_slot": a_slot,
+         "b_slot": b_slot})
     lane_len = n_items // n_lanes
     quant_a = a_scales is not None
     quant_b = b_scales is not None
+    out_shape = jax.ShapeDtypeStruct((n_c_blocks, bm, bn), out_dtype)
 
+    if not pipeline:
+        return _legacy_spgemm_call(
+            a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start, seg_write,
+            accum_prev, valid, a_scales, b_scales, out_shape, lane_len,
+            n_lanes, bm, bk, bn, unroll, masked, quant_a, quant_b, interpret)
+
+    depth = 2 * unroll
+    n_steps = lane_len // unroll
+    prefetch = (a_idx, b_idx, c_idx, seg_start, seg_write, accum_prev,
+                valid, a_fetch, b_fetch, a_slot, b_slot)
+    in_specs = [pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY)]
+    operands = [a_blocks, b_blocks]
+    scale_spec = pl.BlockSpec(
+        (1, unroll), lambda l, s, *rest: (l * n_steps + s, 0))
+    if quant_a:
+        in_specs.append(scale_spec)
+        operands.append(jnp.take(a_scales, a_idx).reshape(-1, unroll))
+    if quant_b:
+        in_specs.append(scale_spec)
+        operands.append(jnp.take(b_scales, b_idx).reshape(-1, unroll))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(prefetch),
+        grid=(n_lanes, n_steps),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (1, bm, bn),
+            lambda l, s, ai, bi, ci, *rest: (
+                ci[l * lane_len + s * unroll], 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((depth, bm, bk), a_blocks.dtype),
+            pltpu.VMEM((depth, bk, bn), b_blocks.dtype),
+            pltpu.SemaphoreType.DMA((depth,)),
+            pltpu.SemaphoreType.DMA((depth,)),
+        ],
+    )
+    kernel = _make_pipeline_kernel(lane_len, unroll, masked, quant_a, quant_b)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+    )(*prefetch, *operands)
+
+
+def _legacy_spgemm_call(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
+                        seg_write, accum_prev, valid, a_scales, b_scales,
+                        out_shape, lane_len, n_lanes, bm, bk, bn, unroll,
+                        masked, quant_a, quant_b, interpret):
+    """BlockSpec auto-pipeline baseline (see ``_legacy_spmm_call``)."""
     # index maps absorb the variable scalar-prefetch tail (*rest) so the
     # optional scale operands don't change their arity
     def sel(ref_pick, g):
@@ -145,7 +313,7 @@ def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
                 ci[l * lane_len + s * unroll], 0, 0)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
     )
-    kernel = _make_kernel(lane_len, unroll, masked, quant_a, quant_b)
+    kernel = _make_legacy_kernel(lane_len, unroll, masked, quant_a, quant_b)
     prefetch = ((a_idx, b_idx, c_idx, seg_start, seg_write, accum_prev, valid)
                 + ((a_scales,) if quant_a else ())
                 + ((b_scales,) if quant_b else ()))
@@ -153,7 +321,7 @@ def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((n_c_blocks, bm, bn), out_dtype),
+        out_shape=out_shape,
         interpret=interpret,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),

@@ -2,42 +2,57 @@
 
 The TPU realization of the paper's dynamic dataflow for sparse-weight
 layers.  The kernel runs a **lane-parallel work list** of nonzero A-block
-multiplies whose *order is the reuse mechanism*: Pallas re-fetches a block
-from HBM only when its ``index_map`` result changes between sequential grid
-steps, so the Segment schedule (``repro.core.schedule.build_spmm_schedule``)
-directly converts schedule locality into HBM-traffic savings:
+multiplies whose *order is the reuse mechanism*, and moves its operands
+through an **explicit double-buffered DMA pipeline**: A and B live in HBM
+(``pltpu.ANY`` refs) and the kernel issues ``pltpu.make_async_copy`` for
+item *i+1*'s tiles into a ``2·unroll``-slot VMEM ring buffer while item *i*
+runs on the MXU, waiting on a copy only at consumption — the SpArch-style
+fetch/merge overlap, scheduled ahead of time instead of reactively:
 
+* per-item ``a_fetch``/``b_fetch`` flags (precomputed by
+  ``repro.core.schedule.fetch_flags`` from the same schedule the traffic
+  model prices — predicted fetch counts are kernel reality by construction)
+  gate every copy: consecutive items sharing ``k`` (SELECTA's row-wise
+  intersection, boundary-chained between segments) skip the B re-fetch and
+  read the resident ring slot, lane-padding no-ops move no data, and a
+  lane's first item always fetches (lane cuts break residency);
+* ``a_slot``/``b_slot`` give each item's resident ring slot — the ring
+  advances one slot per *fetch*, so a reused tile is always the most
+  recently copied one and an in-flight copy never lands on a slot that is
+  still being read;
 * consecutive items with the same output block row ``m`` accumulate the C
   tile in VMEM and write it back once per segment (output revisiting);
-* consecutive items sharing ``k`` (SELECTA's row-wise intersection,
-  boundary-chained between segments) reuse the resident B row-block;
-* folded segments (long output rows split for load balance, §IV-D) re-enter
-  with ``accum_prev=1`` and read-modify-write the C tile — the temporal-fold
-  partial-sum merge.
+  folded segments re-enter with ``accum_prev=1`` and read-modify-write the
+  C tile — the temporal-fold partial-sum merge.
 
 Grid: ``(n_lanes, n_tiles_n, lane_len // unroll)``.  The lane axis is
 **parallel** — the schedule is cut into load-balanced lanes at segment-chain
 boundaries (``repro.core.schedule.partition_lanes``), so independent output
-chains run concurrently (megacore / multi-core) and the merge network no
-longer degenerates to one PE.  The item axis stays innermost/sequential so
-segment accumulation is ordered; ``unroll`` executes several items per grid
-step (all sharing one output tile, the scheduler guarantees it) to amortize
-grid overhead on small blocks.
+chains run concurrently (megacore / multi-core).  The item axis stays
+innermost/sequential so segment accumulation is ordered and the pipeline's
+issue-one-step-ahead discipline holds; each grid step executes ``unroll``
+items against the resident ring slots.
 
 A blocks stay in **original BSR storage order**: the scalar-prefetched
-``slot_idx`` addresses each item's tile directly (the IPM analogue — exact
-positions ahead of time), so no schedule-order gather of the block values
-ever happens.  ``transpose_lhs`` contracts along the block's row axis
+``slot_idx`` addresses each item's tile directly in HBM (the IPM analogue —
+exact positions ahead of time), so no schedule-order gather of the block
+values ever happens.  ``transpose_lhs`` contracts along the block's row axis
 instead, computing ``Aᵀ`` tiles from the same storage — the backward pass
 reads the forward weight array with zero copies.
 
 Scalar-prefetch operands (``PrefetchScalarGridSpec``) carry the schedule:
-``slot_idx, m_idx, k_idx, seg_start, seg_write, accum_prev, valid``
-(``valid=0`` marks lane-padding no-ops whose contribution is masked out),
-plus — for quantized block storage — the per-block fp32 ``a_scales``,
-applied to the fp32 accumulator via the same ``slot_idx`` indirection
+``slot_idx, m_idx, k_idx, seg_start, seg_write, accum_prev, valid,
+a_fetch, b_fetch, a_slot, b_slot`` (``valid=0`` marks lane-padding no-ops
+whose contribution is masked out).  For quantized block storage the
+per-block fp32 scales are gathered per item and ride a regular VMEM operand
+blocked per grid step — one vector load per step instead of ``unroll``
+serialized SMEM scalar reads — and are applied to the fp32 accumulator
 (dequantization is a kernel-local concern; storage format never leaks into
 the schedule).
+
+``pipeline=False`` keeps the legacy BlockSpec auto-pipeline (operand
+re-fetch decided by Pallas' index-map revisiting rule, scales on the
+scalar-prefetch path) as a baseline for benchmarks and debugging.
 """
 from __future__ import annotations
 
@@ -51,8 +66,8 @@ from jax.experimental.pallas import tpu as pltpu
 from .compat import CompilerParams
 
 
-def _make_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
-                 masked: bool, quantized: bool):
+def _make_legacy_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
+                        masked: bool, quantized: bool):
     contract = (((0,), (0,)), ((), ())) if transpose_lhs \
         else (((1,), (0,)), ((), ()))
 
@@ -86,10 +101,113 @@ def _make_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
             if quantized:
                 # Per-block scale is a scalar factor of the whole tile, so
                 # applying it to the fp32 product (after the MXU dot) is
-                # algebraically exact: (s·Aq) @ B == s · (Aq @ B).  The scale
-                # is fetched from SMEM via the prefetched block slot — the
-                # same indirection the payload uses, transpose included.
+                # algebraically exact: (s·Aq) @ B == s · (Aq @ B).
                 contrib = contrib * a_scales[slot_idx[i]]
+            if masked:
+                contrib = jnp.where(valid[i] == 1, contrib, 0.0)
+            acc[...] += contrib
+
+            @pl.when(seg_write[i] == 1)
+            def _write(i=i):
+                out[...] = acc[...].astype(out.dtype)
+
+    return _kernel
+
+
+def _make_pipeline_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
+                          masked: bool, quantized: bool, contract_blk: int,
+                          bn: int):
+    contract = (((0,), (0,)), ((), ())) if transpose_lhs \
+        else (((1,), (0,)), ((), ()))
+
+    def _kernel(slot_idx, m_idx, k_idx, seg_start, seg_write, accum_prev,
+                valid, a_fetch, b_fetch, a_slot, b_slot, *refs):
+        a_hbm, b_hbm, refs = refs[0], refs[1], refs[2:]
+        if quantized:
+            scale_ref, refs = refs[0], refs[1:]
+        out, acc, a_buf, b_buf, a_sem, b_sem = refs
+        # grid coordinates are read once here: pl.program_id must not be
+        # bound inside a pl.when branch (interpret mode only substitutes it
+        # in the top-level kernel jaxpr)
+        j = pl.program_id(1)
+        s = pl.program_id(2)
+        n_steps = pl.num_programs(2)
+        lane_base = pl.program_id(0) * lane_len
+        base = lane_base + s * unroll
+
+        # The copy descriptors are reconstructed identically at issue and
+        # wait time — Pallas pairs them through the per-slot DMA semaphore.
+        def a_copy(i, slot):
+            return pltpu.make_async_copy(
+                a_hbm.at[slot_idx[i]], a_buf.at[slot], a_sem.at[slot])
+
+        def b_copy(i, slot):
+            return pltpu.make_async_copy(
+                b_hbm.at[pl.ds(k_idx[i] * contract_blk, contract_blk),
+                         pl.ds(j * bn, bn)],
+                b_buf.at[slot], b_sem.at[slot])
+
+        def issue(i):
+            @pl.when(a_fetch[i] == 1)
+            def _():
+                a_copy(i, a_slot[i]).start()
+
+            @pl.when(b_fetch[i] == 1)
+            def _():
+                b_copy(i, b_slot[i]).start()
+
+        # Pass prologue: the first grid step of every (lane, N-tile) pass
+        # fetches its own items (a lane's first item always has its fetch
+        # flags set, so nothing stale survives a pass restart) …
+        @pl.when(s == 0)
+        def _prologue():
+            for g in range(unroll):
+                issue(lane_base + g)
+
+        # … and every step issues the *next* step's copies before touching
+        # its own tiles: the DMA engine fills the other ring slots while the
+        # MXU contracts the resident ones.
+        @pl.when(s + 1 < n_steps)
+        def _pipeline():
+            for g in range(unroll):
+                issue(base + unroll + g)
+
+        for g in range(unroll):
+            i = base + g
+
+            @pl.when(seg_start[i] == 1)
+            def _init(i=i):
+                @pl.when(accum_prev[i] == 1)
+                def _load():    # folded continuation: merge with prior partial
+                    acc[...] = out[...].astype(jnp.float32)
+
+                @pl.when(accum_prev[i] == 0)
+                def _zero():
+                    acc[...] = jnp.zeros_like(acc)
+
+            # Wait only at consumption, only when this item actually fetched
+            # — a reused tile's copy was already awaited by the item that
+            # brought it in.
+            @pl.when(a_fetch[i] == 1)
+            def _wait_a(i=i):
+                a_copy(i, a_slot[i]).wait()
+
+            @pl.when(b_fetch[i] == 1)
+            def _wait_b(i=i):
+                b_copy(i, b_slot[i]).wait()
+
+            contrib = jax.lax.dot_general(
+                a_buf[a_slot[i]].astype(jnp.float32),
+                b_buf[b_slot[i]].astype(jnp.float32),
+                dimension_numbers=contract,
+                preferred_element_type=jnp.float32)
+            if quantized:
+                # Per-block scale is a scalar factor of the whole tile, so
+                # applying it to the fp32 product (after the MXU dot) is
+                # algebraically exact: (s·Aq) @ B == s · (Aq @ B).  The
+                # step's scales arrive as one VMEM vector (gathered through
+                # slot_idx at call time) — no per-item SMEM scalar loads.
+                contrib = contrib * scale_ref[0, g]
             if masked:
                 contrib = jnp.where(valid[i] == 1, contrib, 0.0)
             acc[...] += contrib
@@ -104,6 +222,8 @@ def _make_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
 def validate_schedule_args(n_items, n_lanes, unroll, arrays):
     """Shared scalar-prefetch schedule validation for both Segment kernels."""
     for name, arr in arrays.items():
+        if arr is None:
+            continue
         if arr.shape != (n_items,):
             raise ValueError(
                 f"{name} has shape {arr.shape}, expected ({n_items},) to "
@@ -117,17 +237,37 @@ def validate_schedule_args(n_items, n_lanes, unroll, arrays):
                          f"by unroll={unroll}")
 
 
+def resolve_pipeline(pipeline, fetch_arrays) -> bool:
+    """Resolve the ``pipeline`` switch against the fetch-flag arrays.
+
+    ``None`` auto-selects: pipelined iff the flags were supplied (plans
+    built by ``repro.api`` always carry them; hand-built schedules without
+    flags fall back to the BlockSpec auto-pipeline).  An explicit ``True``
+    without the arrays is an error, not a silent downgrade.
+    """
+    have = [a is not None for a in fetch_arrays]
+    if pipeline is None:
+        pipeline = all(have)
+    if pipeline and not all(have):
+        raise ValueError(
+            "pipeline=True needs the a_fetch/b_fetch/a_slot/b_slot schedule "
+            "arrays (precompute them via repro.core.schedule.fetch_flags, "
+            "or build the schedule through repro.api.plan_matmul)")
+    return pipeline
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("grid_m", "n_lanes", "bn", "unroll", "transpose_lhs",
-                     "masked", "interpret", "out_dtype"))
+                     "masked", "interpret", "out_dtype", "pipeline"))
 def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
                  accum_prev, valid, b_dense, *, grid_m: int, n_lanes: int = 1,
                  bn: int = 512, unroll: int = 1, transpose_lhs: bool = False,
                  masked: bool = True, interpret: bool = False,
-                 out_dtype=jnp.float32, a_scales=None):
+                 out_dtype=jnp.float32, a_scales=None, a_fetch=None,
+                 b_fetch=None, a_slot=None, b_slot=None, pipeline=None):
     """Compute ``C = BSR(A) @ B`` (or ``BSR(A)ᵀ @ B``) under a lane-parallel
-    Segment schedule.
+    Segment schedule with an explicit double-buffered DMA pipeline.
 
     Args:
       a_blocks: (n_blocks, bm, bk) A tiles in **original BSR storage order**.
@@ -141,16 +281,23 @@ def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
         ``transpose_lhs``).
       grid_m: number of output block rows.
       n_lanes: parallel lanes; ``n_items`` must be ``n_lanes * lane_len``.
-      bn: N-tile width (VMEM working set: row·bn + contract·bn + bm·bk).
+      bn: N-tile width (VMEM working set: row·bn + 2·unroll·(contract·bn +
+        bm·bk)).
       unroll: items executed per grid step (scheduler must have aligned
         segment chains to ``unroll``).
       transpose_lhs: contract along each A tile's row axis (``Aᵀ @ B``) —
         the backward pass reads forward storage directly.
       masked: skip the validity mask when the schedule has no pads.
       a_scales: (n_blocks,) fp32 per-block dequantization scales, or None
-        for fp32 blocks.  Scales ride the scalar-prefetch path (SMEM) and
-        are applied to the fp32 accumulator, addressed by the same
-        ``slot_idx`` indirection as the payload.
+        for fp32 blocks.  Gathered per item and streamed as a per-step VMEM
+        vector (pipelined) or read from SMEM via ``slot_idx`` (legacy).
+      a_fetch/b_fetch: (n_items,) int32 DMA fetch flags — 1 where the item
+        must copy its A tile / B row-tile from HBM, 0 where the resident
+        ring slot is reused (see ``repro.core.schedule.fetch_flags``).
+      a_slot/b_slot: (n_items,) int32 resident ring-buffer slot per item.
+      pipeline: True = explicit DMA pipeline (requires the four fetch
+        arrays), False = legacy BlockSpec auto-pipeline, None = auto
+        (pipelined iff the arrays are present).
     Returns:
       (grid_m * row_block, N) dense output.
     """
@@ -171,15 +318,77 @@ def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
             f"dense rhs width N={n_dim} (b_dense shape {b_dense.shape}) is "
             f"not divisible by the N-tile width bn={bn}; pad N or pick a "
             f"divisor (see repro.api.pick_bn)")
+    pipeline = resolve_pipeline(pipeline, (a_fetch, b_fetch, a_slot, b_slot))
     validate_schedule_args(
         seg_start.shape[0], n_lanes, unroll,
         {"slot_idx": slot_idx, "m_idx": m_idx, "k_idx": k_idx,
-         "seg_write": seg_write, "accum_prev": accum_prev, "valid": valid})
+         "seg_write": seg_write, "accum_prev": accum_prev, "valid": valid,
+         "a_fetch": a_fetch, "b_fetch": b_fetch, "a_slot": a_slot,
+         "b_slot": b_slot})
     n_items = seg_start.shape[0]
     lane_len = n_items // n_lanes
     n_tiles_n = n_dim // bn
     quantized = a_scales is not None
+    out_shape = jax.ShapeDtypeStruct((grid_m * row_blk, n_dim), out_dtype)
 
+    if not pipeline:
+        return _legacy_spmm_call(
+            a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
+            accum_prev, valid, b_dense, a_scales, out_shape, lane_len,
+            n_lanes, n_tiles_n, bm, bk, row_blk, contract_blk, bn, unroll,
+            transpose_lhs, masked, quantized, interpret)
+
+    depth = 2 * unroll
+    n_steps = lane_len // unroll
+    prefetch = (slot_idx, m_idx, k_idx, seg_start, seg_write, accum_prev,
+                valid, a_fetch, b_fetch, a_slot, b_slot)
+    in_specs = [pl.BlockSpec(memory_space=pltpu.ANY),
+                pl.BlockSpec(memory_space=pltpu.ANY)]
+    operands = [a_blocks, b_dense]
+    if quantized:
+        # one fp32 scale per item, laid out per grid step — the kernel reads
+        # its step's scales as a single VMEM vector
+        scale_items = jnp.take(a_scales, slot_idx).reshape(-1, unroll)
+        in_specs.append(pl.BlockSpec(
+            (1, unroll), lambda l, j, s, *rest: (l * n_steps + s, 0)))
+        operands.append(scale_items)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=len(prefetch),
+        grid=(n_lanes, n_tiles_n, n_steps),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec(
+            (row_blk, bn),
+            lambda l, j, s, slot, m, *rest: (
+                m[l * lane_len + s * unroll], j)),
+        scratch_shapes=[
+            pltpu.VMEM((row_blk, bn), jnp.float32),
+            pltpu.VMEM((depth, bm, bk), a_blocks.dtype),
+            pltpu.VMEM((depth, contract_blk, bn), b_dense.dtype),
+            pltpu.SemaphoreType.DMA((depth,)),
+            pltpu.SemaphoreType.DMA((depth,)),
+        ],
+    )
+    kernel = _make_pipeline_kernel(lane_len, unroll, transpose_lhs, masked,
+                                   quantized, contract_blk, bn)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        interpret=interpret,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(*prefetch, *operands)
+
+
+def _legacy_spmm_call(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
+                      accum_prev, valid, b_dense, a_scales, out_shape,
+                      lane_len, n_lanes, n_tiles_n, bm, bk, row_blk,
+                      contract_blk, bn, unroll, transpose_lhs, masked,
+                      quantized, interpret):
+    """BlockSpec auto-pipeline baseline (operand re-fetch decided by the
+    index-map revisiting rule; per-block scales on the scalar-prefetch
+    path).  Kept for benchmarking the explicit DMA pipeline against and for
+    schedules built without fetch flags."""
     # index maps absorb the variable scalar-prefetch tail (*rest) so the
     # optional a_scales operand doesn't change their arity
     def a_map(g):
@@ -203,14 +412,15 @@ def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
                 m[l * lane_len + s * unroll], j)),
         scratch_shapes=[pltpu.VMEM((row_blk, bn), jnp.float32)],
     )
-    kernel = _make_kernel(lane_len, unroll, transpose_lhs, masked, quantized)
+    kernel = _make_legacy_kernel(lane_len, unroll, transpose_lhs, masked,
+                                 quantized)
     prefetch = (slot_idx, m_idx, k_idx, seg_start, seg_write, accum_prev,
                 valid) + ((a_scales,) if quantized else ())
     operands = [a_blocks] * unroll + [b_dense] * unroll
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((grid_m * row_blk, n_dim), out_dtype),
+        out_shape=out_shape,
         interpret=interpret,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),

@@ -67,11 +67,12 @@ def test_partition_lanes_clamps_to_segment_count():
     assert lay.n_lanes == 3
 
 
-def test_lane_traffic_unroll_counts_per_stream_fetches():
-    """Unrolled kernels bind each of the G step items to an independent
-    BlockSpec stream (index maps strided by G), so revisit credit only
-    exists between position g of consecutive steps — never between the
-    items inside one step."""
+def test_lane_traffic_unroll_models_pipeline_vs_legacy():
+    """The explicit-DMA kernels fetch per *item*, so revisit credit spans
+    every consecutive pair — unroll included (the default model).  The
+    legacy BlockSpec auto-pipeline bound each of the G step items to an
+    independent stream (index maps strided by G), so its model only credits
+    position g of consecutive steps."""
     from repro.core.schedule import lane_traffic_spmm
     # two chains of two items; k = [0, 5, 5, 7]
     m = np.array([0, 0, 1, 1])
@@ -79,24 +80,33 @@ def test_lane_traffic_unroll_counts_per_stream_fetches():
     seg_start = np.array([1, 0, 1, 0])
     valid = np.ones(4, bool)
     t1 = lane_traffic_spmm(m, k, seg_start, valid, 1, 8, 8, 1)
-    # adjacent model: items 1->2 share k=5 across the chain boundary
+    # per-item model: items 1->2 share k=5 across the chain boundary
     assert t1["b_fetches"] == 3
     t2 = lane_traffic_spmm(m, k, seg_start, valid, 1, 8, 8, 1, unroll=2)
-    # stream model: stream 0 compares k[0]=0 vs k[2]=5, stream 1 k[1]=5 vs
-    # k[3]=7 — the within-step adjacency carries nothing, all 4 fetch
-    assert t2["b_fetches"] == 4
+    # the pipelined kernel's fetch flags don't change with unroll
+    assert t2["b_fetches"] == 3
+    t3 = lane_traffic_spmm(m, k, seg_start, valid, 1, 8, 8, 1, unroll=2,
+                           pipeline=False)
+    # legacy stream model: stream 0 compares k[0]=0 vs k[2]=5, stream 1
+    # k[1]=5 vs k[3]=7 — the within-step adjacency carries nothing
+    assert t3["b_fetches"] == 4
 
 
-def test_unrolled_plan_traffic_matches_stream_model():
+def test_unrolled_plan_traffic_matches_fetch_flags():
+    """Plan traffic is priced from the same fetch flags the kernel's DMA
+    pipeline is gated by — predicted counts ARE the schedule's counts."""
     a = _patterns()["random"]
     plan = api.plan_matmul(a, n_cols_hint=64, n_lanes=2, unroll=2,
                            fold_len=3, cache=False)
     k = np.asarray(plan.k_idx)
     valid = np.asarray(plan.valid).astype(bool)
-    k3 = k.reshape(plan.n_lanes, -1, plan.unroll)
-    delta = np.ones_like(k3, dtype=bool)
-    delta[:, 1:, :] = k3[:, 1:, :] != k3[:, :-1, :]
-    assert plan.traffic["b_fetches"] == int((delta.reshape(-1) & valid).sum())
+    k2 = k.reshape(plan.n_lanes, -1)
+    delta = np.ones_like(k2, dtype=bool)
+    delta[:, 1:] = k2[:, 1:] != k2[:, :-1]
+    n_fetch = int((delta.reshape(-1) & valid).sum())
+    assert plan.traffic["b_fetches"] == n_fetch
+    assert int(np.asarray(plan.b_fetch).sum()) == n_fetch
+    assert plan.traffic["a_fetches"] == int(np.asarray(plan.a_fetch).sum())
 
 
 def test_lane_traffic_accounts_boundary_breaks():
