@@ -1,0 +1,33 @@
+"""Static analysis passes over Segment plans and Pallas kernels.
+
+Two independent gates, both pure-host (nothing compiles or runs on an
+accelerator):
+
+* :mod:`repro.analysis.invariants` — the plan verifier.
+  :func:`verify_plan` proves a :class:`~repro.api.plan.SegmentPlan`'s
+  schedule against the named invariant catalog (``INVARIANTS``) and
+  returns typed :class:`Finding` records; it is the planner's default
+  soundness check and the rejection oracle the ROADMAP autotuner needs.
+* :mod:`repro.analysis.jaxpr_lint` — the kernel hazard linter.
+  :func:`lint_callable` traces Pallas kernels to jaxprs and flags DMA /
+  ``pl.when`` hazards (``RULES``).
+
+Layering: this package imports ``repro.core`` only.  ``repro.api`` sits
+above it (the ``verify=`` hooks), and ``core.schedule`` reaches down
+lazily for the shared ``check_lane_accum`` implementation.
+"""
+from .invariants import (INVARIANTS, Finding, PlanVerificationError,
+                         VerifyResult, check_lane_accum,
+                         check_scale_agreement, check_traffic_agreement,
+                         verify_plan)
+from .jaxpr_lint import (RULES, LintFinding, find_pallas_kernels,
+                         lint_callable, lint_kernel_jaxpr,
+                         lint_segment_kernels)
+
+__all__ = [
+    "INVARIANTS", "Finding", "PlanVerificationError", "VerifyResult",
+    "check_lane_accum", "check_scale_agreement", "check_traffic_agreement",
+    "verify_plan",
+    "RULES", "LintFinding", "find_pallas_kernels", "lint_callable",
+    "lint_kernel_jaxpr", "lint_segment_kernels",
+]

@@ -18,6 +18,8 @@ See ``docs/API.md`` for the full plan lifecycle, the policy registry
 contract, and the deprecation shims (``repro.kernels.ops.plan_spmm`` /
 ``plan_spgemm`` now delegate here).
 """
+from repro.analysis.invariants import (Finding, PlanVerificationError,
+                                       VerifyResult, verify_plan)
 from repro.core.formats import (QUANT_DTYPES, QuantizedBlocks,
                                 dequantize_blocks, quant_error_bound,
                                 quantize_blocks)
@@ -37,6 +39,8 @@ __all__ = [
     "SegmentPlan", "SPMM", "SPGEMM",
     "plan_matmul", "execute_plan", "apply_plan", "pick_bn",
     "clear_plan_cache", "plan_cache_stats", "pattern_fingerprint",
+    # static verification (full surface lives in repro.analysis)
+    "verify_plan", "Finding", "VerifyResult", "PlanVerificationError",
     # quantized block storage
     "QUANT_DTYPES", "QuantizedBlocks", "quantize_blocks",
     "dequantize_blocks", "quant_error_bound",

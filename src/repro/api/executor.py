@@ -143,7 +143,8 @@ def _run_spgemm(plan: SegmentPlan, *, backend: str,
 
 
 def execute_plan(plan: SegmentPlan, rhs=None, *, bn: int = 512,
-                 backend: Optional[str] = None, out_dtype=None) -> jax.Array:
+                 backend: Optional[str] = None, out_dtype=None,
+                 verify=None) -> jax.Array:
     """Forward-only plan execution (``plan(...)`` delegates here).
 
     Backend resolution order: explicit argument > ``plan.backend`` > the
@@ -152,7 +153,18 @@ def execute_plan(plan: SegmentPlan, rhs=None, *, bn: int = 512,
     ``plan.out_dtype`` (set via ``plan_matmul(..., out_dtype=...)``) >
     float32.  Accumulation is always fp32; the dtype only affects the
     written output tiles.
+
+    ``verify`` (``True``/``"fast"``/``"full"``) runs the static schedule
+    verifier before any kernel launches and raises
+    :class:`~repro.analysis.PlanVerificationError` on a finding — the
+    debug hook for hand-edited or externally-deserialized plans (planner
+    output is better verified once via ``plan_matmul(..., verify=...)``,
+    which amortizes through the plan cache).
     """
+    if verify:
+        from repro.analysis.invariants import verify_plan
+        level = "fast" if verify is True else verify
+        verify_plan(plan, level=level).raise_if_findings()
     backend = resolve_backend(backend if backend is not None else plan.backend)
     if out_dtype is None:
         out_dtype = plan.out_dtype

@@ -184,6 +184,19 @@ class SegmentPlan:
     def replace(self, **kw) -> "SegmentPlan":
         return dataclasses.replace(self, **kw)
 
+    def verify(self, level: str = "fast", **kw):
+        """Run the static schedule verifier over this plan.
+
+        Delegates to :func:`repro.analysis.verify_plan` (``level`` is
+        ``"fast"`` or ``"full"``; keyword args — ``invariants``, ``bn``,
+        ``n_cols`` — pass through) and returns its
+        :class:`~repro.analysis.VerifyResult`; call
+        ``.raise_if_findings()`` on it to turn findings into a
+        :class:`~repro.analysis.PlanVerificationError`.
+        """
+        from repro.analysis.invariants import verify_plan
+        return verify_plan(self, level=level, **kw)
+
     @property
     def quantized(self) -> bool:
         """True when block values are stored quantized (+ per-block scales)."""

@@ -37,6 +37,8 @@ from typing import Dict, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.invariants import (PlanVerificationError, VerifyResult,
+                                       check_scale_agreement, verify_plan)
 from repro.core.formats import (BSR, QUANT_DTYPES, QuantizedBlocks,
                                 quantize_blocks)
 from repro.core.policies import get_policy
@@ -156,6 +158,7 @@ class _PlanTemplate:
     plan: SegmentPlan                           # lhs/rhs_blocks are None
     traffic_basis: Optional[dict] = None        # spmm fwd, at n_cols=1
     grad_traffic_basis: Optional[dict] = None   # spmm bwd, at n_cols=1
+    verified_level: Optional[str] = None        # deepest verify_plan run yet
 
     def realize(self, a: BSR, b: Optional[BSR], backend: Optional[str],
                 n_cols_hint: int, out_dtype: Optional[str]) -> SegmentPlan:
@@ -361,6 +364,18 @@ def _build_spgemm_template(a: BSR, b: BSR, policy: str,
     return _PlanTemplate(plan=plan)
 
 
+def _resolve_verify(verify) -> Optional[str]:
+    """Normalize the ``verify`` knob: None/False off, True → "fast"."""
+    if verify is None or verify is False:
+        return None
+    if verify is True:
+        return "fast"
+    if verify in ("fast", "full"):
+        return verify
+    raise ValueError(f"verify must be None/False/True/'fast'/'full', "
+                     f"got {verify!r}")
+
+
 def _rhs_to_hint(a: BSR, b) -> Tuple[Optional[BSR], int]:
     """Normalize ``B_or_shape`` → (BSR | None, n_cols_hint)."""
     if b is None:
@@ -388,7 +403,7 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
                 with_grad: bool = False, n_cols_hint: Optional[int] = None,
                 n_lanes: int = 1, unroll: int = 1, cache: bool = True,
                 quantize: Optional[str] = None,
-                out_dtype=None) -> SegmentPlan:
+                out_dtype=None, verify=None) -> SegmentPlan:
     """Plan a Segment-dataflow matmul for the sparsity pattern of ``a``.
 
     Args:
@@ -414,6 +429,14 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
         pattern never share a cache entry or fingerprint.
       out_dtype: default dtype of the written output tiles (resolved at
         execution; overridable per call).  Accumulation stays fp32.
+      verify: run the static schedule verifier
+        (:func:`repro.analysis.verify_plan`) and raise
+        :class:`~repro.analysis.PlanVerificationError` on any finding.
+        ``True``/``"fast"`` runs the structural catalog, ``"full"`` adds
+        the independent traffic-model count recomputation.  The expensive
+        pass runs once per cached *template* (remembered on the cache
+        entry), so per-call overhead on a cache hit is a single O(1)
+        scale-agreement check on the realized values.
     """
     if backend is not None:
         resolve_backend(backend)   # fail fast on typos
@@ -434,6 +457,7 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
     key = pattern_fingerprint(kind, f"{policy}#{pol.serial}", fold_len,
                               with_grad, *mats, n_lanes=n_lanes,
                               unroll=unroll, block_dtype=block_dtype)
+    level = _resolve_verify(verify)
     tpl = _CACHE.get(key) if cache else None
     if tpl is None:
         if kind == SPMM:
@@ -447,4 +471,21 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
             _CACHE[key] = tpl
     else:
         _STATS["hits"] += 1
-    return tpl.realize(a, b, backend, hint, out_dtype)
+    if level is not None:
+        covered = ("fast", "full") if level == "fast" else ("full",)
+        if tpl.verified_level not in covered:
+            # verify the value-free template once; the result is remembered
+            # on the cache entry so repeated realizations stay O(1)
+            verify_plan(tpl.plan, level=level).raise_if_findings()
+            tpl.verified_level = level
+    plan = tpl.realize(a, b, backend, hint, out_dtype)
+    if level is not None:
+        # the only per-realize degree of freedom is the value leaves —
+        # check just their dtype/shape agreement on every call (the direct
+        # single-invariant call keeps the cache-hit path O(1))
+        findings = check_scale_agreement(plan)
+        if findings:
+            raise PlanVerificationError(VerifyResult(
+                findings=tuple(findings), level=level,
+                checked=("scale-agreement",)))
+    return plan

@@ -476,7 +476,14 @@ def _validate_lane_accum(perm: np.ndarray, owner: np.ndarray, seg_start,
                          seg_write, accum_prev) -> None:
     """Every ``accum_prev=1`` item must find its output tile already written
     (``seg_write=1``) earlier in the *same* lane — the kernel's ``_load``
-    branch reads the C buffer, and an unwritten slot holds garbage."""
+    branch reads the C buffer, and an unwritten slot holds garbage.
+
+    The check itself lives in :func:`repro.analysis.check_lane_accum` —
+    one implementation shared with the plan verifier's ``accum-prev-order``
+    invariant; this wrapper gathers the schedule-order arrays into lane
+    layout and turns the first finding into the planner's ``ValueError``.
+    The import is lazy: ``core`` stays importable without ``analysis``.
+    """
     accum_prev = np.asarray(accum_prev)
     seg_start = (np.ones_like(accum_prev) if seg_start is None
                  else np.asarray(seg_start))
@@ -487,30 +494,14 @@ def _validate_lane_accum(perm: np.ndarray, owner: np.ndarray, seg_start,
         if arr.shape != owner.shape:
             raise ValueError(f"{name} has shape {arr.shape}, expected "
                              f"{owner.shape} to match owner")
-    n_owner = int(owner.max()) + 1 if owner.size else 0
-    big = np.iinfo(np.int64).max
-    for li in range(perm.shape[0]):
-        items = perm[li][perm[li] >= 0]
-        o = owner[items]
-        pos = np.arange(items.size, dtype=np.int64)
-        # first RMW read vs first write per output tile, vectorized — this
-        # runs on every plan build, so no per-item Python loop
-        reads = (seg_start[items] == 1) & (accum_prev[items] == 1)
-        writes = seg_write[items] == 1
-        first_read = np.full(n_owner, big)
-        np.minimum.at(first_read, o[reads], pos[reads])
-        first_write = np.full(n_owner, big)
-        np.minimum.at(first_write, o[writes], pos[writes])
-        bad = np.nonzero((first_read < big) & (first_write >= first_read))[0]
-        if bad.size:
-            tile = int(bad[0])
-            item = int(items[first_read[tile]])
-            raise ValueError(
-                f"schedule item {item} (output tile {tile}, lane {li}) has "
-                f"accum_prev=1 but no earlier seg_write to that tile in "
-                f"the same lane — the kernel would read-modify-write an "
-                f"output buffer nothing wrote; the item's segment chain "
-                f"must follow its tile's first write within one lane")
+    from repro.analysis.invariants import check_lane_accum
+    filled = np.where(perm >= 0, perm, 0)
+    findings = check_lane_accum(
+        owner[filled], seg_start[filled], seg_write[filled],
+        accum_prev[filled], perm >= 0, perm.shape[0],
+        item_ids=perm)
+    if findings:
+        raise ValueError(findings[0].message)
 
 
 def fetch_flags(stream: np.ndarray, valid: np.ndarray, n_lanes: int,

@@ -220,6 +220,19 @@ def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
     n_items = seg_start.shape[0]
     bm, bk = a_blocks.shape[1:]
     bn = b_blocks.shape[2]
+    if b_blocks.shape[1] != bk:
+        raise ValueError(
+            f"contraction blocks disagree: a_blocks {tuple(a_blocks.shape)} "
+            f"contracts over bk={bk} but b_blocks {tuple(b_blocks.shape)} "
+            f"has row blocks of {b_blocks.shape[1]} — A tiles are (bm, bk), "
+            f"so B tiles must be (bk, bn)")
+    if n_c_blocks < 1 and n_items > 0:
+        raise ValueError(
+            f"n_c_blocks={n_c_blocks} with a non-empty schedule "
+            f"(n_items={n_items}): every schedule item accumulates into a "
+            f"symbolic C block, so the output needs at least one "
+            f"(all-masked patterns short-circuit before the kernel — see "
+            f"repro.api.executor)")
     if a_scales is not None and a_scales.shape != (a_blocks.shape[0],):
         raise ValueError(
             f"a_scales has shape {a_scales.shape}, expected one fp32 scale "

@@ -128,7 +128,8 @@ def _make_pipeline_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
         out, acc, a_buf, b_buf, a_sem, b_sem = refs
         # grid coordinates are read once here: pl.program_id must not be
         # bound inside a pl.when branch (interpret mode only substitutes it
-        # in the top-level kernel jaxpr)
+        # in the top-level kernel jaxpr) — statically enforced by
+        # repro.analysis.jaxpr_lint's program-id-in-when rule in CI
         j = pl.program_id(1)
         s = pl.program_id(2)
         n_steps = pl.num_programs(2)
