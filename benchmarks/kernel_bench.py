@@ -29,7 +29,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro import api
-from repro.analysis import check_scale_agreement, verify_plan
+from repro.analysis import check_scale_agreement, plan_vmem_bytes, verify_plan
 from repro.core.formats import BSR
 from repro.kernels.segment_spmm import segment_spmm
 
@@ -127,6 +127,9 @@ def lane_sweep(repeats: int = 12) -> dict:
             "b_fetches": tr["b_fetches"],
             "lane_imbalance": tr.get("imbalance", 1.0),
             "padded_items": tr.get("padded_items", 0),
+            # static analyzer's VMEM working set at this case's bn (the
+            # budget the planner's vmem_limit_bytes knob would enforce)
+            "vmem_bytes": plan_vmem_bytes(plan, bn=LANE_CASE["bn"]),
         }
     return out
 
@@ -158,6 +161,7 @@ def quant_sweep() -> dict:
             "traffic_total_bytes": tr["total"],
             "a_bytes": tr["a_bytes"],
             "max_err": float(np.abs(got - want).max() / norm),
+            "vmem_bytes": plan_vmem_bytes(plan, bn=QUANT_CASE["bn"]),
         }
     for mode in QUANT_MODES[1:]:
         out[mode]["traffic_ratio_vs_fp32"] = (
@@ -222,6 +226,13 @@ def pipeline_sweep(repeats: int = 12) -> dict:
                 + verify_plan(gplan, level="full").findings)
     out["verify_findings"] = len(findings)
     out["verify_finding_ids"] = sorted({f.invariant for f in findings})
+
+    # analyzer VMEM budgets for the three kernel instances this sweep
+    # exercises (pipelined / legacy SpMM at this bn, pipelined SpGEMM)
+    out["vmem_bytes_pipelined"] = plan_vmem_bytes(plan, bn=LANE_CASE["bn"])
+    out["vmem_bytes_legacy"] = plan_vmem_bytes(plan, bn=LANE_CASE["bn"],
+                                               pipelined=False)
+    out["vmem_bytes_spgemm"] = plan_vmem_bytes(gplan)
 
     # amortized cost of verify="full": the hook adds exactly two things to
     # plan_matmul — one full-catalog template verification per cache miss

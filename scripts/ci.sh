@@ -33,14 +33,26 @@ python -c "import repro.analysis"
 echo "import lint OK"
 
 echo "== static verification =="
-# (1) kernel hazard linter: trace every shipped Segment kernel variant to
-# jaxprs and flag pl.program_id-inside-pl.when reads, DMA starts without a
-# matching wait, and VMEM reads not dominated by their DMA wait.  (2) plan
-# verifier sweep: build plans from the sim pattern corpus across the knob
-# grid (lanes x unroll x quantize, spmm + spgemm + degenerates) and prove
-# the full invariant catalog on each.  Both exit 1 on any finding.
+# (1) kernel analyzer: trace every shipped Pallas kernel (Segment spmm/
+# spgemm variants x the knob grid, flash_attention, moe_gemm, rg_lru) and
+# run the syntactic hazard lint plus the symbolic proofs — index-range,
+# parallel-race, ring-slot-war, sem-balance, vmem-budget (see
+# repro.analysis: accesses/ranges/races/budget).  (2) plan verifier sweep:
+# build plans from the sim pattern corpus across the knob grid (lanes x
+# unroll x quantize, spmm + spgemm + degenerates), prove the full
+# invariant catalog on each, and emit the machine-readable findings
+# artifact (VERIFY_plans.json) for upload/diffing.  Both exit 1 on any
+# finding.
 python -m repro.analysis.jaxpr_lint -q
-python scripts/verify_plans.py --level full -q
+python scripts/verify_plans.py --level full -q --json VERIFY_plans.json
+python - <<'EOF'
+import json
+d = json.load(open("VERIFY_plans.json"))
+assert d["summary"]["ok"] and d["summary"]["n_findings"] == 0, d["summary"]
+assert d["summary"]["n_plans"] > 100, d["summary"]   # the sweep ran fully
+print(f"verify artifact OK: {d['summary']['n_plans']} plans clean "
+      f"at level={d['level']!r}")
+EOF
 
 echo "== serve bench smoke =="
 # end-to-end continuous-batching engine + throughput tracking from this PR
@@ -110,6 +122,16 @@ assert p["spgemm_model_b_fetches"] > 0, p
 # (one template verification per cache miss + an O(1) per-realize check)
 assert p["verify_build_overhead"] < 0.10, p["verify_build_overhead"]
 assert p["max_err_pipelined"] < 1e-4, p
+# static VMEM budgets (repro.analysis.plan_vmem_bytes) must be reported per
+# case and fit the per-core limit the planner's vmem_limit_bytes gate uses
+from repro.analysis import DEFAULT_VMEM_LIMIT_BYTES
+for n, row in lanes.items():
+    assert 0 < row["vmem_bytes"] <= DEFAULT_VMEM_LIMIT_BYTES, (n, row)
+for mode, row in q.items():
+    assert 0 < row["vmem_bytes"] <= DEFAULT_VMEM_LIMIT_BYTES, (mode, row)
+for key in ("vmem_bytes_pipelined", "vmem_bytes_legacy",
+            "vmem_bytes_spgemm"):
+    assert 0 < p[key] <= DEFAULT_VMEM_LIMIT_BYTES, (key, p[key])
 # interpret wall time vs the non-pipelined baseline: emulated DMAs could
 # regress pathologically without parity breaking — keep the pipelined path
 # within a generous factor of the legacy auto-pipeline (it is currently

@@ -10,14 +10,21 @@ empty symbolic C patterns, unpadded ``n_lanes=1``) — and runs
 the planner or the verifier; the process exits 1 so ``scripts/ci.sh`` can
 gate on it.
 
+``--json OUT`` additionally writes a machine-readable findings artifact
+(per-plan records + per-finding invariant/message + summary) for CI upload
+and run-to-run diffing.  ``--fast`` is shorthand for ``--level fast`` —
+the structural catalog without the full-level independent traffic-model
+count recomputation (the expensive half of a full sweep).
+
 Usage::
 
     PYTHONPATH=src python scripts/verify_plans.py [--level fast|full]
-        [--scale 256] [--seed 7] [-q]
+        [--fast] [--scale 256] [--seed 7] [--json OUT.json] [-q]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -53,16 +60,23 @@ def _pattern_bsr(gen, rng, dim: int, density: float) -> BSR:
     return BSR.from_dense(dense, BLOCK)
 
 
-def sweep(level: str, scale: int, seed: int, quiet: bool) -> int:
+def sweep(level: str, scale: int, seed: int, quiet: bool,
+          json_out=None) -> int:
     rng = np.random.default_rng(seed)
-    n_plans = 0
+    records = []
     n_findings = 0
     t0 = time.perf_counter()
 
     def check(label: str, plan) -> None:
-        nonlocal n_plans, n_findings
-        n_plans += 1
+        nonlocal n_findings
         res = verify_plan(plan, level=level)
+        rec = {"plan": label, "kind": plan.kind, "ok": bool(res.ok),
+               "checked": len(res.checked),
+               "findings": [{"invariant": f.invariant,
+                             "message": f.message,
+                             "severity": getattr(f, "severity", "error")}
+                            for f in res.findings]}
+        records.append(rec)
         if not res.ok:
             n_findings += len(res.findings)
             print(f"FAIL {label}:")
@@ -121,21 +135,40 @@ def sweep(level: str, scale: int, seed: int, quiet: bool) -> int:
 
     dt = time.perf_counter() - t0
     status = "FAIL" if n_findings else "OK"
-    print(f"{status}: verified {n_plans} plans at level={level!r} in "
+    print(f"{status}: verified {len(records)} plans at level={level!r} in "
           f"{dt:.1f}s, {n_findings} finding(s)")
+    if json_out:
+        artifact = {
+            "level": level, "scale": scale, "seed": seed,
+            "elapsed_s": round(dt, 3),
+            "summary": {"n_plans": len(records),
+                        "n_findings": n_findings,
+                        "ok": n_findings == 0},
+            "plans": records,
+        }
+        with open(json_out, "w") as f:
+            json.dump(artifact, f, indent=2)
+        print(f"wrote {json_out}")
     return 1 if n_findings else 0
 
 
 def main(argv=None) -> int:
     p = argparse.ArgumentParser(description=__doc__.splitlines()[0])
     p.add_argument("--level", choices=("fast", "full"), default="full")
+    p.add_argument("--fast", action="store_true",
+                   help="shorthand for --level fast (skips the full-level "
+                        "traffic-agreement recomputation)")
     p.add_argument("--scale", type=int, default=256,
                    help="square matrix dimension for the pattern corpus")
     p.add_argument("--seed", type=int, default=7)
+    p.add_argument("--json", metavar="OUT", default=None,
+                   help="write a machine-readable findings artifact here")
     p.add_argument("-q", "--quiet", action="store_true",
                    help="only print failures and the summary line")
     args = p.parse_args(argv)
-    return sweep(args.level, args.scale, args.seed, args.quiet)
+    level = "fast" if args.fast else args.level
+    return sweep(level, args.scale, args.seed, args.quiet,
+                 json_out=args.json)
 
 
 if __name__ == "__main__":

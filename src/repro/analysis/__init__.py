@@ -10,19 +10,36 @@ accelerator):
   soundness check and the rejection oracle the ROADMAP autotuner needs.
 * :mod:`repro.analysis.jaxpr_lint` — the kernel hazard linter.
   :func:`lint_callable` traces Pallas kernels to jaxprs and flags DMA /
-  ``pl.when`` hazards (``RULES``).
+  ``pl.when`` hazards syntactically (``RULES``); :func:`analyze_callable`
+  adds the symbolic rule set (``ANALYZER_RULES``) on top.
+* :mod:`repro.analysis.accesses` / :mod:`ranges` / :mod:`races` /
+  :mod:`budget` — the symbolic dataflow analyzer: an abstract
+  interpretation of each kernel jaxpr over its whole grid yielding a
+  slot-granular access IR (:class:`KernelIR`), from which index-range,
+  parallel-race, ring-slot WAR, semaphore-balance, and VMEM-budget
+  proofs are derived.  :class:`VmemBudgetError` is the named plan-time
+  error the planner's ``vmem_limit_bytes`` gate raises.
 
 Layering: this package imports ``repro.core`` only.  ``repro.api`` sits
 above it (the ``verify=`` hooks), and ``core.schedule`` reaches down
 lazily for the shared ``check_lane_accum`` implementation.
 """
+from .accesses import (Access, Dim, KernelIR, RefInfo, kernel_ir_from_eqn,
+                       trace_kernel_irs)
+from .budget import (DEFAULT_VMEM_LIMIT_BYTES, VmemBudgetError,
+                     check_plan_vmem, check_vmem_budget, kernel_vmem_bytes,
+                     plan_vmem_bytes, spgemm_vmem_bytes, spmm_vmem_bytes)
 from .invariants import (INVARIANTS, Finding, PlanVerificationError,
                          VerifyResult, check_lane_accum,
                          check_scale_agreement, check_traffic_agreement,
                          verify_plan)
-from .jaxpr_lint import (RULES, LintFinding, find_pallas_kernels,
+from .jaxpr_lint import (RULES, LintFinding, analyze_callable,
+                         analyze_shipped_kernels, find_pallas_kernels,
                          lint_callable, lint_kernel_jaxpr,
                          lint_segment_kernels)
+from .races import (ANALYZER_RULES, check_parallel_races, check_ring_war,
+                    check_sem_balance)
+from .ranges import check_ranges
 
 __all__ = [
     "INVARIANTS", "Finding", "PlanVerificationError", "VerifyResult",
@@ -30,4 +47,11 @@ __all__ = [
     "verify_plan",
     "RULES", "LintFinding", "find_pallas_kernels", "lint_callable",
     "lint_kernel_jaxpr", "lint_segment_kernels",
+    "ANALYZER_RULES", "Access", "Dim", "KernelIR", "RefInfo",
+    "analyze_callable", "analyze_shipped_kernels", "kernel_ir_from_eqn",
+    "trace_kernel_irs", "check_ranges", "check_parallel_races",
+    "check_ring_war", "check_sem_balance",
+    "DEFAULT_VMEM_LIMIT_BYTES", "VmemBudgetError", "check_plan_vmem",
+    "check_vmem_budget", "kernel_vmem_bytes", "plan_vmem_bytes",
+    "spgemm_vmem_bytes", "spmm_vmem_bytes",
 ]

@@ -327,18 +327,187 @@ def lint_segment_kernels(verbose: bool = False) -> List[LintFinding]:
     return findings
 
 
+# ---------------------------------------------------------------------------
+# Symbolic analysis entry points (abstract interpretation; see accesses.py,
+# ranges.py, races.py, budget.py — imported lazily so the syntactic linter
+# stays importable on its own)
+# ---------------------------------------------------------------------------
+
+
+def _analyze_trace(closed, args, label: str, vmem_limit=None,
+                   verbose: bool = False) -> List[LintFinding]:
+    """Syntactic lint + every symbolic rule over one traced jaxpr."""
+    from .accesses import find_kernel_invocations, kernel_ir_from_eqn
+    from .budget import DEFAULT_VMEM_LIMIT_BYTES, check_vmem_budget
+    from .races import (check_parallel_races, check_ring_war,
+                        check_sem_balance)
+    from .ranges import check_ranges
+
+    limit = DEFAULT_VMEM_LIMIT_BYTES if vmem_limit is None else vmem_limit
+    kernels = find_pallas_kernels(closed)
+    if not kernels:
+        raise ValueError(f"no pallas_call found while tracing {label!r} "
+                         f"— nothing to analyze")
+    findings: List[LintFinding] = []
+    for name, kj in kernels:
+        findings.extend(lint_kernel_jaxpr(kj, kernel_name=f"{label}:{name}"))
+    for name, eqn, scalars in find_kernel_invocations(closed, args):
+        ir = kernel_ir_from_eqn(eqn, name=f"{label}:{name}", scalars=scalars)
+        before = len(findings)
+        findings.extend(check_ranges(ir))
+        findings.extend(check_parallel_races(ir))
+        findings.extend(check_ring_war(ir))
+        findings.extend(check_sem_balance(ir))
+        findings.extend(check_vmem_budget(ir, limit))
+        if verbose:
+            n = len(findings) - before
+            state = f"{n} finding(s)" if n else "proved clean"
+            print(f"  analyze {ir.name}: grid={ir.grid} "
+                  f"parallel={ir.parallel_axes} {state}")
+    return findings
+
+
+def analyze_callable(fn, *args, label: Optional[str] = None,
+                     vmem_limit: Optional[int] = None,
+                     **kwargs) -> List[LintFinding]:
+    """Trace ``fn(*args, **kwargs)`` and run the syntactic linter plus the
+    full symbolic rule set (index-range, parallel-race, ring-slot-war,
+    sem-balance, vmem-budget) on every Pallas kernel inside.
+
+    Scalar-prefetch operands are resolved from the trace's constants and
+    the concrete ``args``, so the proofs are exact over the traced grid.
+    Raises ``ValueError`` when the trace holds no ``pallas_call``.
+    """
+    closed = jax.make_jaxpr(fn)(*args, **kwargs)
+    return _analyze_trace(closed, args,
+                          label or getattr(fn, "__name__", str(fn)),
+                          vmem_limit=vmem_limit)
+
+
+def analyze_shipped_kernels(verbose: bool = False) -> List[LintFinding]:
+    """The full static gate: syntactic lint + symbolic proofs over every
+    shipped Pallas kernel × a knob grid.
+
+    Covers the six Segment variants :func:`lint_segment_kernels` traces
+    (pipelined fwd/grad/quantized, SpGEMM, both legacy fallbacks) plus
+    extra (n_lanes, unroll) and fp8 knob points, and extends the gate to
+    the non-Segment kernels — ``flash_attention`` (causal, and
+    windowed+GQA to exercise the ``rem``-guarded skip path), ``moe_gemm``,
+    and ``rg_lru`` — so their ``parallel`` axes get the same race proof.
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.api import apply_plan, execute_plan, plan_matmul
+    from repro.core.formats import BSR
+    from repro.kernels.flash_attention import flash_attention
+    from repro.kernels.moe_gemm import build_moe_chunks, moe_gemm
+    from repro.kernels.rg_lru import rg_lru
+    from repro.kernels.segment_spgemm import segment_spgemm
+    from repro.kernels.segment_spmm import segment_spmm
+
+    a = BSR.random(np.random.default_rng(0), (128, 128), (32, 32), 0.5)
+    b = BSR.random(np.random.default_rng(1), (128, 128), (32, 32), 0.5)
+    x = jnp.zeros((128, 64), jnp.float32)
+
+    def spmm(n_lanes, unroll, **kw):
+        p = plan_matmul(a, policy="segment", n_lanes=n_lanes, unroll=unroll,
+                        cache=False, **kw)
+        return p, lambda: jax.make_jaxpr(
+            lambda xx: execute_plan(p, xx, bn=64, backend="interpret"))(x)
+
+    plan, _ = spmm(2, 2, with_grad=True)
+    gplan = plan_matmul(a, b, policy="segment", n_lanes=2, unroll=2,
+                        cache=False)
+    gplan1 = plan_matmul(a, b, policy="segment", n_lanes=1, unroll=1,
+                         cache=False)
+
+    q = jnp.zeros((2, 256, 64), jnp.float32)
+    kv = jnp.zeros((2, 256, 64), jnp.float32)
+    xt = jnp.zeros((2, 256, 16), jnp.float32)
+    h0 = jnp.zeros((2, 16), jnp.float32)
+    ap = jnp.zeros((16,), jnp.float32)
+    n_experts = 4
+    chunk_expert = jnp.arange(n_experts, dtype=jnp.int32)
+    xs = jnp.zeros((n_experts * 128, 32), jnp.float32)
+    w = jnp.zeros((n_experts, 32, 64), jnp.float32)
+
+    traces = [
+        ("spmm-pipelined",
+         lambda: jax.make_jaxpr(
+             lambda xx: execute_plan(plan, xx, bn=64,
+                                     backend="interpret"))(x), (x,)),
+        ("spmm-grad",
+         lambda: jax.make_jaxpr(jax.grad(
+             lambda xx: apply_plan(plan, xx, bn=64,
+                                   backend="interpret").sum()))(x), (x,)),
+        ("spmm-quantized-int8", spmm(2, 2, quantize="int8")[1], (x,)),
+        ("spmm-quantized-fp8", spmm(1, 1, quantize="fp8")[1], (x,)),
+        ("spmm-lanes1", spmm(1, 1)[1], (x,)),
+        ("spmm-lanes4", spmm(4, 2)[1], (x,)),
+        ("spgemm-pipelined",
+         lambda: jax.make_jaxpr(
+             lambda: execute_plan(gplan, backend="interpret"))(), ()),
+        ("spgemm-lanes1",
+         lambda: jax.make_jaxpr(
+             lambda: execute_plan(gplan1, backend="interpret"))(), ()),
+        ("spmm-legacy",
+         lambda: jax.make_jaxpr(lambda xx: segment_spmm(
+             plan.lhs_blocks, plan.slot_idx, plan.m_idx, plan.k_idx,
+             plan.seg_start, plan.seg_write, plan.accum_prev, plan.valid,
+             xx, grid_m=plan.grid[0], n_lanes=plan.n_lanes, bn=64,
+             unroll=plan.unroll, masked=plan.has_pads, interpret=True,
+             pipeline=False))(x), (x,)),
+        ("spgemm-legacy",
+         lambda: jax.make_jaxpr(lambda: segment_spgemm(
+             gplan.lhs_blocks, gplan.rhs_blocks, gplan.a_idx, gplan.b_idx,
+             gplan.c_idx, gplan.seg_start, gplan.seg_write,
+             gplan.accum_prev, gplan.valid, n_c_blocks=gplan.n_out_blocks,
+             n_lanes=gplan.n_lanes, unroll=gplan.unroll,
+             masked=gplan.has_pads, interpret=True, pipeline=False))(), ()),
+        ("flash-causal",
+         lambda: jax.make_jaxpr(lambda qq, kk, vv: flash_attention(
+             qq, kk, vv, causal=True, interpret=True))(q, kv, kv),
+         (q, kv, kv)),
+        ("flash-window-gqa",
+         lambda: jax.make_jaxpr(lambda qq, kk, vv: flash_attention(
+             qq, kk, vv, causal=True, window=128, q_period=128,
+             interpret=True))(q, kv, kv), (q, kv, kv)),
+        ("moe-gemm",
+         lambda: jax.make_jaxpr(lambda xx, ww, ce: moe_gemm(
+             xx, ww, ce, chunk_rows=128, bn=64,
+             interpret=True))(xs, w, chunk_expert), (xs, w, chunk_expert)),
+        ("rg-lru",
+         lambda: jax.make_jaxpr(lambda *args: rg_lru(
+             *args, ct=128, interpret=True))(xt, xt, xt, ap, h0),
+         (xt, xt, xt, ap, h0)),
+    ]
+    findings: List[LintFinding] = []
+    for label, trace, args in traces:
+        findings.extend(_analyze_trace(trace(), args, label,
+                                       verbose=verbose))
+    return findings
+
+
 def main(argv=None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     verbose = "-q" not in argv
-    print("linting shipped Segment kernel variants "
-          f"({len(RULES)} rules: {', '.join(sorted(RULES))})")
-    findings = lint_segment_kernels(verbose=verbose)
+    if "--syntactic" in argv:
+        print("linting shipped Segment kernel variants "
+              f"({len(RULES)} rules: {', '.join(sorted(RULES))})")
+        findings = lint_segment_kernels(verbose=verbose)
+    else:
+        from .races import ANALYZER_RULES
+        rules = sorted(set(RULES) | set(ANALYZER_RULES))
+        print("analyzing shipped Pallas kernels "
+              f"({len(rules)} rules: {', '.join(rules)})")
+        findings = analyze_shipped_kernels(verbose=verbose)
     if findings:
         print(f"FAIL: {len(findings)} hazard(s)")
         for f in findings:
             print(f"  {f}")
         return 1
-    print("OK: all kernel variants lint clean")
+    print("OK: all kernel variants analyze clean")
     return 0
 
 

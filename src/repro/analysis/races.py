@@ -1,0 +1,396 @@
+"""Race, ring-buffer WAR, and semaphore-balance proofs over the access IR.
+
+Three rules, all driven by the slot-granular :class:`~.accesses.KernelIR`:
+
+``parallel-race``
+    Per axis declared ``parallel`` in ``dimension_semantics``, prove no two
+    iterations write (or read-and-write) overlapping regions:
+
+    * **blocked outputs** — the region a grid point touches is its BlockSpec
+      index-map coordinate tuple; all writers of a region must share one
+      parallel-coordinate signature, and every reader of a written region
+      must share the writer's signature (the ``accum_prev``
+      read-modify-write path is legal exactly because the planner pins
+      folded continuations to the writer's lane);
+    * **scratch refs** — Mosaic revisits scratch across sequential steps but
+      gives no ordering across parallel iterations, so at every *parallel
+      entry point* (a grid point whose row-major predecessor differs in a
+      parallel coordinate) each scratch read must be covered by an earlier
+      same-point write of its slot.  A kernel that accumulates into scratch
+      across the parallel axis (the classic cross-lane bug) fails here.
+
+``ring-slot-war``
+    Kernel-side strengthening of ``invariants.py``'s schedule-side
+    ``ring-war`` simulation: per sequential chain, a per-(ref, slot)
+    in-flight counter driven by ``dma_start``/``dma_wait`` events; any read
+    of a ring slot whose copy is still in flight is a write-after-read /
+    read-under-copy hazard.  This is the slot-granular check the syntactic
+    linter's documented ref-base false negative could not express.
+
+``sem-balance``
+    Path-sensitive semaphore balance: DMA starts and waits are counted per
+    (semaphore, slot) along every ``pl.when`` path — the guard masks are
+    resolved per grid point, so a wait present on only one branch of a
+    ``pl.when`` shows up as a start/wait imbalance on the other branch's
+    points.  Data-dependent guards the interpreter cannot resolve yield an
+    explicit "unprovable" finding rather than a silent pass.
+
+All three rules treat unknown guards conservatively (may-execute for
+hazard-producing events, must-execute required for hazard-discharging
+ones), so a clean report is a proof over the analyzed grid.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from .accesses import TOP, Access, KernelIR, READ_KINDS, WRITE_KINDS
+from .jaxpr_lint import LintFinding
+
+RULE_RACE = "parallel-race"
+RULE_RING = "ring-slot-war"
+RULE_SEM = "sem-balance"
+
+#: catalog of the symbolic analyzer's rules (the syntactic linter keeps its
+#: own ``RULES``); ``index-range`` lives in :mod:`ranges`, ``vmem-budget``
+#: in :mod:`budget`.
+ANALYZER_RULES = {
+    "index-range": "proven out-of-bounds pl.ds / dynamic-slice footprint",
+    RULE_RACE: "parallel-axis iterations overlap on an output/scratch ref",
+    RULE_RING: "ring-buffer slot read while its DMA copy is in flight",
+    RULE_SEM: "DMA start/wait unbalanced along some pl.when path",
+    "vmem-budget": "scratch + operand block windows exceed the VMEM limit",
+}
+
+
+def _slot_at(val, p: int):
+    if val is TOP:
+        return TOP
+    if isinstance(val, str):            # "all": full leading slice
+        return val
+    if isinstance(val, np.ndarray):
+        return int(val[p])
+    return int(val)
+
+
+def _parallel_sig(ir: KernelIR, p: int) -> Tuple[int, ...]:
+    return tuple(int(ir.coords[ax][p]) for ax in ir.parallel_axes)
+
+
+def _chains(ir: KernelIR) -> List[np.ndarray]:
+    """Grid points grouped by parallel signature, each in row-major
+    (sequential execution) order.  With no parallel axis the whole grid is
+    one sequential chain."""
+    G = ir.n_points
+    if not ir.parallel_axes:
+        return [np.arange(G)]
+    sig = np.zeros(G, dtype=np.int64)
+    for ax in ir.parallel_axes:
+        sig = sig * ir.grid[ax] + ir.coords[ax]
+    order = np.argsort(sig, kind="stable")
+    chains = []
+    sorted_sig = sig[order]
+    start = 0
+    for i in range(1, G + 1):
+        if i == G or sorted_sig[i] != sorted_sig[start]:
+            chains.append(np.sort(order[start:i]))
+            start = i
+    return chains
+
+
+def _entry_points(ir: KernelIR) -> np.ndarray:
+    """Flat indices whose row-major predecessor has a different parallel
+    signature (the first point Mosaic may schedule with cold scratch)."""
+    G = ir.n_points
+    if not ir.parallel_axes:
+        return np.array([0], dtype=np.int64)
+    entries = [0]
+    for p in range(1, G):
+        if _parallel_sig(ir, p) != _parallel_sig(ir, p - 1):
+            entries.append(p)
+    return np.asarray(entries, dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# parallel-race
+# ---------------------------------------------------------------------------
+
+
+def _region_key(ir: KernelIR, acc: Access, p: int):
+    """Hashable region identifier for an output access at point ``p``:
+    the BlockSpec coordinate tuple for blocked refs, the explicit
+    footprint (start, size) tuple otherwise.  ``None`` = unresolvable."""
+    coords = ir.block_coords.get(acc.ref.name)
+    if coords is not None:
+        key = []
+        for c in coords:
+            if c is TOP:
+                return None
+            key.append(int(c[p]) if isinstance(c, np.ndarray) else int(c))
+        return tuple(key)
+    key = []
+    for d in acc.dims:
+        if d.full:
+            key.append(("full",))
+            continue
+        if d.start is TOP or d.size is TOP:
+            return None
+        s = int(d.start[p]) if isinstance(d.start, np.ndarray) \
+            else int(d.start)
+        key.append((s, int(d.size)))
+    return tuple(key)
+
+
+def _check_output_regions(ir: KernelIR, findings: List[LintFinding]) -> None:
+    out_refs = {r.name for r in ir.refs if r.role == "output"}
+    if not out_refs:
+        return
+    # region -> (writer sigs, reader sigs, unprovable?)
+    regions: Dict[Tuple, Dict[str, set]] = {}
+    flagged = set()
+    for acc in ir.accesses:
+        if acc.ref.name not in out_refs:
+            continue
+        is_write = acc.kind in WRITE_KINDS
+        is_read = acc.kind in READ_KINDS
+        if not (is_write or is_read):
+            continue
+        mask = ir.may_mask(acc)
+        for p in np.nonzero(mask)[0]:
+            key = _region_key(ir, acc, int(p))
+            if key is None:
+                if acc.ref.name not in flagged:
+                    flagged.add(acc.ref.name)
+                    findings.append(LintFinding(
+                        rule=RULE_RACE,
+                        message=(f"cannot resolve the region {acc.kind} on "
+                                 f"{acc.ref.name} touches — parallel-axis "
+                                 f"disjointness unprovable"),
+                        kernel=ir.name))
+                continue
+            slot = regions.setdefault((acc.ref.name,) + key,
+                                      {"w": set(), "r": set()})
+            sig = _parallel_sig(ir, int(p))
+            if is_write:
+                slot["w"].add(sig)
+            if is_read:
+                slot["r"].add(sig)
+    for (name, *key), slot in regions.items():
+        if name in flagged:
+            continue
+        if len(slot["w"]) > 1:
+            flagged.add(name)
+            findings.append(LintFinding(
+                rule=RULE_RACE,
+                message=(f"output {name} region {tuple(key)} is written by "
+                         f"{len(slot['w'])} distinct parallel iterations "
+                         f"{sorted(slot['w'])}"),
+                kernel=ir.name))
+        elif slot["w"] and not slot["r"] <= slot["w"]:
+            flagged.add(name)
+            others = sorted(slot["r"] - slot["w"])
+            findings.append(LintFinding(
+                rule=RULE_RACE,
+                message=(f"output {name} region {tuple(key)} written by "
+                         f"parallel iteration {sorted(slot['w'])[0]} but "
+                         f"read by {others}"),
+                kernel=ir.name))
+
+
+def _covers(write: Access, read: Access, p: int) -> bool:
+    """Does ``write`` at point ``p`` fully initialize what ``read`` reads?"""
+    if all(d.full for d in write.dims):
+        return True
+    if not write.dims or not read.dims:
+        return False
+    ws = _slot_at(write.slot(), p)
+    rs = _slot_at(read.slot(), p)
+    if ws is TOP or rs is TOP:
+        return False
+    if ws != "all" and rs != "all" and ws != rs:
+        return False
+    if ws == "all" and rs != "all":
+        pass                     # full leading slice covers any slot
+    elif ws != "all" and rs == "all":
+        return False             # slot write cannot cover a full read
+    return write.rest_full()
+
+
+def _check_scratch_entries(ir: KernelIR, findings: List[LintFinding]) -> None:
+    scratch = {r.name for r in ir.refs
+               if r.role == "scratch" and r.memspace not in ("semaphore",)}
+    if not scratch:
+        return
+    entries = _entry_points(ir)
+    if not ir.parallel_axes:
+        entries = entries[:1]        # only the cold start matters
+    flagged = set()
+    for name in scratch:
+        reads = [a for a in ir.accesses
+                 if a.ref.name == name and a.kind in READ_KINDS]
+        writes = [a for a in ir.accesses
+                  if a.ref.name == name and a.kind in WRITE_KINDS]
+        for acc in reads:
+            may = ir.may_mask(acc)
+            for p in entries:
+                p = int(p)
+                if not may[p]:
+                    continue
+                covered = any(
+                    w.seq < acc.seq and ir.must_mask(w)[p]
+                    and _covers(w, acc, p) for w in writes)
+                if not covered and name not in flagged:
+                    flagged.add(name)
+                    findings.append(LintFinding(
+                        rule=RULE_RACE,
+                        message=(f"scratch {name} may be read at parallel "
+                                 f"entry point grid{ir.point(p)} before any "
+                                 f"same-iteration write — value leaks "
+                                 f"across a parallel axis"),
+                        kernel=ir.name))
+                    break
+            if name in flagged:
+                break
+    return
+
+
+def check_parallel_races(ir: KernelIR) -> List[LintFinding]:
+    """The ``parallel-race`` rule (vacuous without parallel axes)."""
+    findings: List[LintFinding] = []
+    if not ir.parallel_axes:
+        return findings
+    _check_output_regions(ir, findings)
+    _check_scratch_entries(ir, findings)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# ring-slot-war
+# ---------------------------------------------------------------------------
+
+
+def check_ring_war(ir: KernelIR) -> List[LintFinding]:
+    """Per-slot in-flight tracking along each sequential chain: reading a
+    ring-buffer slot whose DMA copy has started but not been waited on is
+    a read-under-copy hazard."""
+    findings: List[LintFinding] = []
+    dma_refs = {a.ref.name for a in ir.accesses if a.kind == "dma_dst"}
+    if not dma_refs:
+        return findings
+    events = [a for a in ir.accesses
+              if a.ref.name in dma_refs
+              and a.kind in ("dma_dst", "dma_wait", "read")]
+    events.sort(key=lambda a: a.seq)
+    flagged = set()
+    unprovable = set()
+    for chain in _chains(ir):
+        inflight: Dict[Tuple[str, int], int] = {}
+        for p in chain:
+            p = int(p)
+            for acc in events:
+                if not ir.may_mask(acc)[p]:
+                    continue
+                slot = _slot_at(acc.slot(), p)
+                if slot is TOP:
+                    if acc.ref.name not in unprovable:
+                        unprovable.add(acc.ref.name)
+                        findings.append(LintFinding(
+                            rule=RULE_RING,
+                            message=(f"cannot resolve the ring slot of a "
+                                     f"{acc.kind} on {acc.ref.name} — WAR "
+                                     f"safety unprovable"),
+                            kernel=ir.name))
+                    continue
+                slots = ([s for s in range(acc.ref.shape[0] or 1)]
+                         if slot == "all" else [slot])
+                for s in slots:
+                    key = (acc.ref.name, s)
+                    if acc.kind == "dma_dst":
+                        # dma_wait discharges, so only count certain starts
+                        if ir.must_mask(acc)[p] or not acc.certain:
+                            inflight[key] = inflight.get(key, 0) + 1
+                    elif acc.kind == "dma_wait":
+                        if ir.must_mask(acc)[p]:
+                            inflight[key] = max(0, inflight.get(key, 0) - 1)
+                    else:                       # read
+                        if inflight.get(key, 0) > 0 and key not in flagged:
+                            flagged.add(key)
+                            findings.append(LintFinding(
+                                rule=RULE_RING,
+                                message=(f"slot {s} of {acc.ref.name} read "
+                                         f"at grid{ir.point(p)} while its "
+                                         f"DMA copy is still in flight"),
+                                kernel=ir.name))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# sem-balance
+# ---------------------------------------------------------------------------
+
+
+def check_sem_balance(ir: KernelIR) -> List[LintFinding]:
+    """Exact per-(semaphore, slot) start/wait counting along each
+    sequential chain, with every ``pl.when`` guard resolved per grid point.
+    Guards the interpreter cannot resolve produce an explicit
+    "unprovable" finding."""
+    findings: List[LintFinding] = []
+    events = [a for a in ir.accesses
+              if a.kind in ("dma_dst", "dma_wait") and a.sem is not None]
+    if not events:
+        return findings
+    events.sort(key=lambda a: a.seq)
+    unprovable = set()
+    reported = set()
+    for acc in events:
+        bad = (not acc.certain) or acc.in_loop or acc.sem_slot is TOP
+        if bad and acc.sem.name not in unprovable:
+            unprovable.add(acc.sem.name)
+            why = ("guard is data-dependent" if not acc.certain
+                   else "slot is unresolved" if acc.sem_slot is TOP
+                   else "op sits inside a loop body")
+            findings.append(LintFinding(
+                rule=RULE_SEM,
+                message=(f"semaphore {acc.sem.name}: balance unprovable — "
+                         f"{why} on a "
+                         f"{'start' if acc.kind == 'dma_dst' else 'wait'}"),
+                kernel=ir.name))
+    for chain in _chains(ir):
+        counts: Dict[Tuple[str, int], int] = {}
+        for p in chain:
+            p = int(p)
+            for acc in events:
+                if acc.sem.name in unprovable:
+                    continue
+                if acc.mask is None or not acc.mask[p]:
+                    continue
+                slot = _slot_at(acc.sem_slot, p)
+                slots = ([s for s in range(acc.sem.shape[0] or 1)]
+                         if slot == "all" else [slot])
+                for s in slots:
+                    key = (acc.sem.name, s)
+                    if acc.kind == "dma_dst":
+                        counts[key] = counts.get(key, 0) + 1
+                    else:
+                        if counts.get(key, 0) == 0:
+                            if key not in reported:
+                                reported.add(key)
+                                findings.append(LintFinding(
+                                    rule=RULE_SEM,
+                                    message=(f"semaphore {acc.sem.name} slot "
+                                             f"{s}: wait at grid"
+                                             f"{ir.point(p)} has no matching "
+                                             f"DMA start on this path"),
+                                    kernel=ir.name))
+                        else:
+                            counts[key] -= 1
+        for (name, s), c in counts.items():
+            if c > 0 and (name, s, "leftover") not in reported:
+                reported.add((name, s, "leftover"))
+                findings.append(LintFinding(
+                    rule=RULE_SEM,
+                    message=(f"semaphore {name} slot {s}: {c} DMA start(s) "
+                             f"never waited on along some pl.when path"),
+                    kernel=ir.name))
+    return findings

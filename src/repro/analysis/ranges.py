@@ -1,0 +1,101 @@
+"""Index-range proofs over the kernel access IR.
+
+Reduces the per-grid-point index vectors of :mod:`accesses` to interval
+facts and reports every access footprint it can *prove* out of bounds of
+its ref extent.  Because the underlying domain is exact per-point constant
+propagation (not a widening interval lattice), a reported violation is a
+real out-of-bounds access at a concrete grid point — there are no range
+false positives.  Unknown (TOP) indices are not reported here; they simply
+carry no proof either way (the race/semaphore passes degrade to
+"unprovable" findings on the accesses that matter for soundness).
+
+Guard masks are honored: an index that would run off the end of a schedule
+array at the final grid step is fine when the access is provably guarded by
+``pl.when(s + 1 < n_steps)`` — the min/max reduction only ranges over the
+points where the access can actually execute.  Accesses with *uncertain*
+guards (data-dependent predicates, loop bodies) are conservatively checked
+over every grid point, which is sound for a "proven violation" rule: a
+violation is only reported if the index is out of bounds at some point
+where the access may run, and an uncertain guard may run anywhere.
+
+Block-index maps are range-checked too: the block coordinate of every
+``BlockSpec``-windowed operand must stay within ``ceil(dim / block_dim)``
+for each axis, over the whole grid.
+
+Rule id: ``index-range``.
+"""
+from __future__ import annotations
+
+from typing import List
+
+import numpy as np
+
+from .accesses import TOP, Access, KernelIR
+from .jaxpr_lint import LintFinding
+
+RULE = "index-range"
+
+
+def _span_violation(ir: KernelIR, acc: Access, d: int):
+    """(lo, hi, extent) of a proven per-dim violation, else None."""
+    dim = acc.dims[d]
+    if dim.start is TOP:
+        return None
+    size = dim.size if dim.size is not TOP else 1
+    extent = acc.extent[d] if d < len(acc.extent) else None
+    if extent is None:
+        return None
+    mask = ir.may_mask(acc)
+    if isinstance(dim.start, np.ndarray):
+        if not mask.any():
+            return None
+        starts = dim.start[mask]
+        lo, hi = int(starts.min()), int(starts.max())
+    else:
+        lo = hi = int(dim.start)
+    if lo < 0 or hi + size > extent:
+        return lo, hi + size - 1, extent
+    return None
+
+
+def check_ranges(ir: KernelIR) -> List[LintFinding]:
+    """Prove every decoded access footprint in bounds; report violations."""
+    findings: List[LintFinding] = []
+    seen = set()
+    for acc in ir.accesses:
+        for d in range(len(acc.dims)):
+            if acc.dims[d].full:
+                continue
+            hit = _span_violation(ir, acc, d)
+            if hit is None:
+                continue
+            lo, hi, extent = hit
+            key = (acc.ref.name, d, acc.kind)
+            if key in seen:
+                continue
+            seen.add(key)
+            findings.append(LintFinding(
+                rule=RULE,
+                message=(f"{acc.kind} on {acc.ref.name} dim {d}: index span "
+                         f"[{lo}, {hi}] exceeds extent {extent}"),
+                kernel=ir.name))
+
+    # block-index maps: coords must stay within the per-axis block counts
+    for name, coords in ir.block_coords.items():
+        bounds = ir.block_bounds.get(name, ())
+        for d, (c, nb) in enumerate(zip(coords, bounds)):
+            if c is TOP:
+                continue
+            arr = np.asarray(c)
+            lo, hi = int(arr.min()), int(arr.max())
+            if lo < 0 or hi >= nb:
+                key = (name, d, "block")
+                if key in seen:
+                    continue
+                seen.add(key)
+                findings.append(LintFinding(
+                    rule=RULE,
+                    message=(f"index map of {name} dim {d}: block coord span "
+                             f"[{lo}, {hi}] outside [0, {nb})"),
+                    kernel=ir.name))
+    return findings

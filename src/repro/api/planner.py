@@ -403,7 +403,8 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
                 with_grad: bool = False, n_cols_hint: Optional[int] = None,
                 n_lanes: int = 1, unroll: int = 1, cache: bool = True,
                 quantize: Optional[str] = None,
-                out_dtype=None, verify=None) -> SegmentPlan:
+                out_dtype=None, verify=None,
+                vmem_limit_bytes: Optional[int] = None) -> SegmentPlan:
     """Plan a Segment-dataflow matmul for the sparsity pattern of ``a``.
 
     Args:
@@ -437,6 +438,14 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
         pass runs once per cached *template* (remembered on the cache
         entry), so per-call overhead on a cache hit is a single O(1)
         scale-agreement check on the realized values.
+      vmem_limit_bytes: when set, check the plan's worst-case kernel VMEM
+        working set (forward and, with ``with_grad``, the transposed
+        backward instance; see :func:`repro.analysis.plan_vmem_bytes`)
+        against this per-core byte limit and raise
+        :class:`~repro.analysis.VmemBudgetError` at plan time — a bad
+        (block, bn, unroll) knob combination fails here, not as an OOM at
+        launch.  The N-tile width is taken as the executor default
+        (``bn=512``) clamped by ``pick_bn`` to the traffic hint's N.
     """
     if backend is not None:
         resolve_backend(backend)   # fail fast on typos
@@ -488,4 +497,13 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
             raise PlanVerificationError(VerifyResult(
                 findings=tuple(findings), level=level,
                 checked=("scale-agreement",)))
+    if vmem_limit_bytes is not None:
+        # lazy imports: the executor for bn clamping, the analyzer for the
+        # budget — neither belongs on the plain plan-build path
+        from repro.analysis.budget import check_plan_vmem
+
+        from .executor import pick_bn
+        bn_eff, _ = pick_bn(max(1, hint), 512)
+        check_plan_vmem(plan, bn=bn_eff, limit=vmem_limit_bytes,
+                        label=f"plan_matmul[{kind}]")
     return plan

@@ -282,8 +282,12 @@ def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
         ``transpose_lhs``).
       grid_m: number of output block rows.
       n_lanes: parallel lanes; ``n_items`` must be ``n_lanes * lane_len``.
-      bn: N-tile width (VMEM working set: row·bn + 2·unroll·(contract·bn +
-        bm·bk)).
+      bn: N-tile width.  The VMEM working set this implies is computed by
+        :func:`repro.analysis.spmm_vmem_bytes` (the analyzer's budget is
+        pinned byte-for-byte to this kernel's scratch + block windows by
+        ``tests/test_kernel_analysis.py``, so consult it rather than a
+        hand-derived formula; the planner's ``vmem_limit_bytes`` knob
+        enforces it at plan time).
       unroll: items executed per grid step (scheduler must have aligned
         segment chains to ``unroll``).
       transpose_lhs: contract along each A tile's row axis (``Aᵀ @ B``) —
