@@ -296,6 +296,123 @@ def pipeline_sweep(repeats: int = 12) -> dict:
     return out
 
 
+AUTOTUNE_N_COLS = 256
+
+# pattern generators for the autotune sweep: the three traffic-sweep cases
+# plus the banded "staircase" pattern whose row k-sets (r0={0}, r1={0},
+# r2={0,1}, r3={1}, repeated down the diagonal) defeat SELECTA's greedy
+# longest-run-first chaining — the canonical case where the cost model must
+# hand the plan to a static dataflow (gustavson's m-order chains perfectly)
+
+
+def _staircase_bsr(rng, bm=32, bk=32, stack=4) -> BSR:
+    base_r = np.array([0, 1, 2, 2, 3])
+    base_c = np.array([0, 0, 0, 1, 1])
+    brow = np.concatenate([base_r + 4 * s for s in range(stack)])
+    bcol = np.concatenate([base_c + 2 * s for s in range(stack)])
+    return BSR(shape=(4 * stack * bm, 2 * stack * bk), block_shape=(bm, bk),
+               brow=brow.astype(np.int64), bcol=bcol.astype(np.int64),
+               blocks=rng.standard_normal(
+                   (brow.size, bm, bk)).astype(np.float32))
+
+
+def autotune_sweep(repeats: int = 12) -> dict:
+    """Tuned vs default-knob schedules: traffic bytes + interpret wall time.
+
+    For each case the :mod:`repro.tune` search runs under the interpret
+    objective (the backend this bench times), the winner is rebuilt and
+    statically verified, and both plans execute jitted/warm with interleaved
+    repeats.  CI gates every case on ``tuned_traffic_bytes <=
+    default_traffic_bytes`` and ``tuned_us_min <= default_us_min * 1.25``
+    (interpret emulates the grid sequentially, so the tuner's wins here are
+    step-count and traffic wins; lane concurrency needs real hardware), and
+    asserts the staircase case dispatches a non-segment dataflow.  The
+    measured ``(bytes, steps, us)`` triples re-fit the cost-model
+    coefficients (``repro.tune.calibrate``) on every run, so drift between
+    the shipped ``DEFAULT_INTERPRET`` model and reality stays visible in
+    the JSON."""
+    from repro import tune
+    from repro.api.executor import pick_bn
+    rng = np.random.default_rng(6)
+    cases = {}
+    for (m, k, blk, dens) in [(1024, 1024, 128, 0.25), (2048, 1024, 128, 0.1),
+                              (512, 2048, 64, 0.3)]:
+        cases[f"M{m}_K{k}_b{blk}_d{dens}"] = BSR.random(
+            rng, (m, k), (blk, blk), dens)
+    cases["staircase_4x"] = _staircase_bsr(rng)
+
+    n = AUTOTUNE_N_COLS
+    out = {}
+    samples = []
+    for name, a in cases.items():
+        res = tune.autotune_matmul(a, n_cols_hint=n, objective="interpret",
+                                   cache=False)
+        default = api.plan_matmul(a, n, cache=False)
+        tuned = api.plan_matmul(a, n, cache=False, **res.plan_kwargs())
+        findings = (verify_plan(default, level="full").findings
+                    + verify_plan(tuned, level="full").findings)
+
+        variants = {}
+        for label, plan in (("default", default), ("tuned", tuned)):
+            bn_req = plan.bn_hint or 512
+            bn_eff, pad = pick_bn(n, bn_req)
+            bd = jnp.asarray(rng.standard_normal(
+                (a.shape[1], n)).astype(np.float32))
+            fn = jax.jit(lambda p, x: api.execute_plan(
+                p, x, backend="interpret"))
+            got = np.asarray(fn(plan, bd))              # compile + warm
+            err = float(np.abs(got - a.to_dense() @ np.asarray(bd)).max())
+            variants[label] = dict(plan=plan, fn=fn, bd=bd, err=err,
+                                   n_tiles=(n + pad) // bn_eff,
+                                   bn_eff=bn_eff)
+        times = {label: [] for label in variants}
+        for _ in range(repeats):
+            for label, v in variants.items():
+                t0 = time.perf_counter()
+                jax.block_until_ready(v["fn"](v["plan"], v["bd"]))
+                times[label].append((time.perf_counter() - t0) * 1e6)
+
+        row = {
+            "policy": tuned.policy,
+            "knobs": dict(fold_len=res.best.candidate.fold_len,
+                          n_lanes=tuned.n_lanes, unroll=tuned.unroll,
+                          bn=res.best.candidate.bn, pipeline=tuned.pipeline),
+            "dataflow_choice": res.dataflow_choice,
+            "dataflow_scores": {k: float(v)
+                                for k, v in res.dataflow_scores.items()},
+            "model_cost_us": res.best.cost_us,
+            "verify_findings": len(findings),
+            "vmem_bytes": plan_vmem_bytes(tuned,
+                                          bn=variants["tuned"]["bn_eff"]),
+        }
+        seq = tune.DEFAULT_INTERPRET
+        for label, v in variants.items():
+            ts = sorted(times[label])
+            plan = v["plan"]
+            row[f"{label}_traffic_bytes"] = plan.traffic["total"]
+            row[f"{label}_us"] = ts[len(ts) // 2]
+            row[f"{label}_us_min"] = ts[0]
+            row[f"{label}_max_err"] = v["err"]
+            samples.append((plan.traffic["total"],
+                            seq.steps(n_lanes=plan.n_lanes,
+                                      lane_len=plan.lane_len,
+                                      unroll=plan.unroll,
+                                      n_tiles_n=v["n_tiles"]),
+                            ts[0]))
+        out[name] = row
+
+    fit = tune.calibrate(samples, lane_parallel=False)
+    out["cost_model"] = {
+        "objective": "interpret",
+        "bytes_per_us": fit.bytes_per_us,
+        "step_us": fit.step_us,
+        "shipped_bytes_per_us": tune.DEFAULT_INTERPRET.bytes_per_us,
+        "shipped_step_us": tune.DEFAULT_INTERPRET.step_us,
+        "n_samples": len(samples),
+    }
+    return out
+
+
 def run(csv: Csv) -> dict:
     """CSV entry point for ``benchmarks.run`` (the figure-suite driver)."""
     ratios = traffic_sweep()
@@ -315,8 +432,15 @@ def run(csv: Csv) -> dict:
     csv.add("kernel/spmm_pipeline_interpret", pipe["pipelined_us"],
             f"legacy={pipe['legacy_us']:.0f}us;"
             f"max_err={pipe['max_err_pipelined']:.2e}")
+    tuned = autotune_sweep()
+    for name, row in tuned.items():
+        if name == "cost_model":
+            continue
+        csv.add(f"kernel/spmm_autotune_{name}", row["tuned_us"],
+                f"policy={row['policy']};"
+                f"bytes_ratio={row['default_traffic_bytes'] / max(1, row['tuned_traffic_bytes']):.3f}")
     return {"traffic": ratios, "lanes": lanes, "quant": quant,
-            "pipeline": pipe}
+            "pipeline": pipe, "autotune": tuned}
 
 
 def main() -> None:
@@ -327,6 +451,7 @@ def main() -> None:
 
     result = {"traffic": traffic_sweep(), "lanes": lane_sweep(args.repeats),
               "quant": quant_sweep(), "pipeline": pipeline_sweep(args.repeats),
+              "autotune": autotune_sweep(args.repeats),
               # case configs as native JSON types (tuples become arrays) so
               # trend tooling can compare run-to-run numerically — str(v)
               # used to turn (512, 512) into an unparseable "(512, 512)"
@@ -338,6 +463,7 @@ def main() -> None:
     print(json.dumps(result["lanes"], indent=2))
     print(json.dumps(result["quant"], indent=2))
     print(json.dumps(result["pipeline"], indent=2))
+    print(json.dumps(result["autotune"], indent=2))
     print(f"wrote {args.out}")
 
 

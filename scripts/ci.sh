@@ -18,10 +18,18 @@ if grep -rnE "^[^#]*(from|import) +repro\.api" src/repro/core; then
     echo "FAIL: repro.core imports repro.api (layering violation)" >&2
     exit 1
 fi
+# repro.tune sits above repro.api (the search builds schedules through the
+# planner), so api may only reach back into tune lazily inside a function
+# body — a module-level import would be a cycle.
+if grep -rnE "^(from|import) +repro\.tune" src/repro/api; then
+    echo "FAIL: repro.api imports repro.tune at module level (cycle)" >&2
+    exit 1
+fi
 # every entry point must import clean in isolation (both directions of the
 # kernels<->api shim seam, plus the consumers).
 for m in repro.api repro.core repro.kernels repro.kernels.ops \
-         repro.models.sparse_ffn repro.runtime.serve repro.models; do
+         repro.models.sparse_ffn repro.runtime.serve repro.models \
+         repro.tune; do
     python -c "import $m" || { echo "FAIL: import $m" >&2; exit 1; }
 done
 # the seam both ways in one process
@@ -50,7 +58,10 @@ import json
 d = json.load(open("VERIFY_plans.json"))
 assert d["summary"]["ok"] and d["summary"]["n_findings"] == 0, d["summary"]
 assert d["summary"]["n_plans"] > 100, d["summary"]   # the sweep ran fully
+# every pattern autotuned under both objectives, each winner checked
+assert d["summary"]["n_autotuned"] >= 12, d["summary"]
 print(f"verify artifact OK: {d['summary']['n_plans']} plans clean "
+      f"({d['summary']['n_autotuned']} autotuned winners) "
       f"at level={d['level']!r}")
 EOF
 
@@ -138,6 +149,39 @@ for key in ("vmem_bytes_pipelined", "vmem_bytes_legacy",
 # ~3x FASTER in interpret mode: two ANY operands emulate cheaper than
 # 2*unroll BlockSpec streams)
 assert p["pipelined_us_min"] <= 10 * p["legacy_us_min"], p
+# autotuner: on every case the searched schedule must match or beat the
+# default knobs on modeled traffic bytes (the search objective is exact
+# there) and stay within wall-time noise of the default (min of interleaved
+# warm calls; the model can only trade bytes for steps it also prices).
+# Every winner must verify clean at level="full", fit the static VMEM
+# budget, and stay numerically exact; at least one case must dispatch a
+# non-segment dataflow (the staircase pattern breaks SELECTA chaining, so
+# gustavson wins it statically).
+at = d["autotune"]
+n_cases = 0
+non_segment = []
+for case, row in at.items():
+    if case == "cost_model":
+        continue
+    n_cases += 1
+    assert row["tuned_traffic_bytes"] <= row["default_traffic_bytes"], \
+        (case, row["tuned_traffic_bytes"], row["default_traffic_bytes"])
+    assert row["tuned_us_min"] <= row["default_us_min"] * 1.25, \
+        (case, row["tuned_us_min"], row["default_us_min"])
+    assert row["verify_findings"] == 0, (case, row["verify_findings"])
+    assert 0 < row["vmem_bytes"] <= DEFAULT_VMEM_LIMIT_BYTES, \
+        (case, row["vmem_bytes"])
+    assert row["tuned_max_err"] < 1e-4, (case, row["tuned_max_err"])
+    assert row["default_max_err"] < 1e-4, (case, row["default_max_err"])
+    if row["policy"] != "segment":
+        non_segment.append((case, row["policy"]))
+assert n_cases >= 4, n_cases
+assert non_segment, {c: r["policy"] for c, r in at.items()
+                     if c != "cost_model"}
+cm = at["cost_model"]
+assert cm["bytes_per_us"] > 0 and cm["step_us"] > 0, cm
+saved = sum(r["default_traffic_bytes"] - r["tuned_traffic_bytes"]
+            for c, r in at.items() if c != "cost_model")
 print(f"kernel bench OK: interpret 1-lane {single:.0f}us, "
       f"best multi-lane {multi:.0f}us, "
       f"max_err {max(r['max_err'] for r in lanes.values()):.2e}, "
@@ -145,7 +189,9 @@ print(f"kernel bench OK: interpret 1-lane {single:.0f}us, "
       f"(err {q['int8']['max_err']:.2e}), "
       f"pipeline fetch contract exact "
       f"(a={p['flag_a_fetches']}, b={p['flag_b_fetches']}), "
-      f"pipelined {p['pipelined_us']:.0f}us vs legacy {p['legacy_us']:.0f}us")
+      f"pipelined {p['pipelined_us']:.0f}us vs legacy {p['legacy_us']:.0f}us, "
+      f"autotune {n_cases} cases ({saved} bytes saved, "
+      f"non-segment: {non_segment})")
 EOF
 
 echo "== tier-1 tests =="

@@ -180,7 +180,11 @@ def plan_vmem_bytes(plan, *, bn: int = 512, pipelined: Optional[bool] = None
     quantized = plan.lhs_scales is not None
     unroll = max(1, int(plan.unroll or 1))
     if pipelined is None:
-        pipelined = plan.a_fetch is not None
+        # a plan built with pipeline=False carries the fetch-flag leaves
+        # (their contract is pipeline-independent) but executes the legacy
+        # BlockSpec path — budget what the executor will actually launch
+        pipelined = (plan.a_fetch is not None
+                     and bool(getattr(plan, "pipeline", True)))
     if plan.kind == "spgemm":
         bn_eff = (plan.rhs_blocks.shape[2] if plan.rhs_blocks is not None
                   else bk)

@@ -550,6 +550,13 @@ def check_traffic_agreement(plan, path: str = "plan") -> List[Finding]:
     contract the fetch flags compile — and demands exact equality with the
     fetch-flag sums and with the counts recorded in ``plan.traffic``.
     Counts are size-independent, so the model runs at unit tile sizes.
+
+    The fetch flags always implement the *pipelined* per-item-adjacency
+    contract (they are pipeline-independent plan leaves), so the flag
+    comparison uses the pipelined model unconditionally; the recorded
+    ``plan.traffic`` counts follow the plan's ``pipeline`` switch — a
+    ``pipeline=False`` plan records legacy per-BlockSpec-stream pricing and
+    is checked against that model.
     """
     out: List[Finding] = []
     a_fetch = _host(getattr(plan, "a_fetch", None))
@@ -560,6 +567,7 @@ def check_traffic_agreement(plan, path: str = "plan") -> List[Finding]:
             or seg_start is None:
         return out
     n_lanes, unroll = plan.n_lanes, plan.unroll
+    pipelined = bool(getattr(plan, "pipeline", True))
     if plan.kind == "spmm":
         m = _host(plan.m_idx)
         k = _host(plan.k_idx)
@@ -567,6 +575,9 @@ def check_traffic_agreement(plan, path: str = "plan") -> List[Finding]:
             return out
         model = lane_traffic_spmm(m, k, seg_start, valid.astype(bool),
                                   n_lanes, 1, 1, 1, unroll=unroll)
+        rec_model = model if pipelined else lane_traffic_spmm(
+            m, k, seg_start, valid.astype(bool), n_lanes, 1, 1, 1,
+            unroll=unroll, pipeline=False)
     else:
         a_idx, b_idx, c_idx = (_host(plan.a_idx), _host(plan.b_idx),
                                _host(plan.c_idx))
@@ -575,6 +586,9 @@ def check_traffic_agreement(plan, path: str = "plan") -> List[Finding]:
         model = lane_traffic_spgemm(a_idx, b_idx, c_idx, seg_start,
                                     valid.astype(bool), n_lanes, 1, 1, 1,
                                     unroll=unroll)
+        rec_model = model if pipelined else lane_traffic_spgemm(
+            a_idx, b_idx, c_idx, seg_start, valid.astype(bool), n_lanes,
+            1, 1, 1, unroll=unroll, pipeline=False)
     recorded = dict(getattr(plan, "traffic_items", ()) or ())
     for stream, flags in (("a", a_fetch), ("b", b_fetch)):
         n_model = int(model[f"{stream}_fetches"])
@@ -588,12 +602,14 @@ def check_traffic_agreement(plan, path: str = "plan") -> List[Finding]:
                 f"independently and must agree exactly",
                 stream=stream, path=path))
         n_rec = recorded.get(f"{stream}_fetches")
-        if n_rec is not None and int(n_rec) != n_model:
+        n_rec_model = int(rec_model[f"{stream}_fetches"])
+        if n_rec is not None and int(n_rec) != n_rec_model:
             out.append(Finding(
                 "traffic-agreement",
                 f"plan.traffic records {int(n_rec)} {stream}-stream fetches "
-                f"but the model recomputes {n_model} — the recorded "
-                f"estimate is stale or was tampered with",
+                f"but the model recomputes {n_rec_model} "
+                f"(pipeline={'on' if pipelined else 'off'} pricing) — the "
+                f"recorded estimate is stale or was tampered with",
                 stream=stream, path=path))
     return out
 

@@ -54,6 +54,15 @@ def pick_bn(n: int, bn: int) -> Tuple[int, int]:
     return bn, (-n) % bn
 
 
+def _resolve_bn(plan: SegmentPlan, bn: Optional[int]) -> int:
+    """Executor N-tile width: explicit argument > the plan's tuned
+    ``bn_hint`` (recorded by the ``repro.tune`` search) > the default 512."""
+    if bn is not None:
+        return bn
+    hint = getattr(plan, "bn_hint", None)
+    return int(hint) if hint else 512
+
+
 def _mask_dead_rows(plan: SegmentPlan, out: jax.Array) -> jax.Array:
     # block rows with no nonzero A blocks are never visited by the grid —
     # their output is undefined (may be NaN); zero them via where.
@@ -109,7 +118,8 @@ def _run_spmm(plan: SegmentPlan, x: jax.Array, *, backend: str,
         masked=plan.has_pads,
         interpret=backend_interpret_flag(backend), out_dtype=out_dtype,
         a_scales=scales, a_fetch=plan.a_fetch, b_fetch=plan.b_fetch,
-        a_slot=plan.a_slot, b_slot=plan.b_slot)
+        a_slot=plan.a_slot, b_slot=plan.b_slot,
+        pipeline=bool(getattr(plan, "pipeline", True)))
     if pad:
         out = out[:, :n]
     return _mask_dead_rows(plan, out)
@@ -139,14 +149,17 @@ def _run_spgemm(plan: SegmentPlan, *, backend: str,
         interpret=backend_interpret_flag(backend), out_dtype=out_dtype,
         a_scales=plan.lhs_scales, b_scales=plan.rhs_scales,
         a_fetch=plan.a_fetch, b_fetch=plan.b_fetch,
-        a_slot=plan.a_slot, b_slot=plan.b_slot)
+        a_slot=plan.a_slot, b_slot=plan.b_slot,
+        pipeline=bool(getattr(plan, "pipeline", True)))
 
 
-def execute_plan(plan: SegmentPlan, rhs=None, *, bn: int = 512,
+def execute_plan(plan: SegmentPlan, rhs=None, *, bn: Optional[int] = None,
                  backend: Optional[str] = None, out_dtype=None,
                  verify=None) -> jax.Array:
     """Forward-only plan execution (``plan(...)`` delegates here).
 
+    ``bn`` resolution order: explicit argument > the plan's tuned
+    ``bn_hint`` (set by the :mod:`repro.tune` search) > 512.
     Backend resolution order: explicit argument > ``plan.backend`` > the
     process default (:func:`repro.api.backends.default_backend`).
     ``out_dtype`` resolves the same way: explicit argument >
@@ -166,6 +179,7 @@ def execute_plan(plan: SegmentPlan, rhs=None, *, bn: int = 512,
         level = "fast" if verify is True else verify
         verify_plan(plan, level=level).raise_if_findings()
     backend = resolve_backend(backend if backend is not None else plan.backend)
+    bn = _resolve_bn(plan, bn)
     if out_dtype is None:
         out_dtype = plan.out_dtype
     out_dtype = jnp.float32 if out_dtype is None else jnp.dtype(out_dtype)
@@ -239,17 +253,18 @@ def _apply_bwd(backend, bn, res, dy):
 _apply.defvjp(_apply_fwd, _apply_bwd)
 
 
-def apply_plan(plan: SegmentPlan, x: jax.Array, *, bn: int = 512,
+def apply_plan(plan: SegmentPlan, x: jax.Array, *, bn: Optional[int] = None,
                backend: Optional[str] = None) -> jax.Array:
     """Differentiable ``y = W @ x`` for an spmm plan (``x``: ``(K, N)``).
 
     Gradients flow to ``plan.lhs_blocks`` (the trainable block values, in
     original BSR storage order) and to ``x``; all schedule/index leaves get
     symbolic-zero cotangents.  Requires the plan to carry a ``grad_plan``
-    (built by ``plan_matmul(..., with_grad=True)``).
+    (built by ``plan_matmul(..., with_grad=True)``).  ``bn=None`` resolves
+    like :func:`execute_plan`: the plan's tuned ``bn_hint``, else 512.
     """
     if plan.kind != SPMM:
         raise ValueError("apply_plan supports spmm plans; execute spgemm "
                          "plans via plan() / execute_plan")
     backend = resolve_backend(backend if backend is not None else plan.backend)
-    return _apply(backend, bn, plan, x)
+    return _apply(backend, _resolve_bn(plan, bn), plan, x)

@@ -49,7 +49,7 @@ _LEAF_FIELDS = (
 _AUX_FIELDS = ("kind", "policy", "block_shape", "grid", "rhs_grid",
                "n_out_blocks", "traffic_items", "fingerprint", "backend",
                "n_lanes", "unroll", "transpose_lhs", "block_dtype",
-               "out_dtype", "has_pads")
+               "out_dtype", "has_pads", "pipeline", "bn_hint")
 
 
 @dataclasses.dataclass(eq=False)   # array fields make generated __eq__ ambiguous
@@ -88,6 +88,14 @@ class SegmentPlan:
     # the executor masks pad contributions exactly when this is set (the
     # conservative default keeps hand-built plans safe)
     has_pads: bool = True
+    # False selects the legacy BlockSpec auto-pipeline instead of the
+    # explicit DMA pipeline; the fetch-flag leaves still ride along (their
+    # contract is pipeline-independent) but the executor and the traffic
+    # pricing both follow this switch
+    pipeline: bool = True
+    # preferred executor N-tile width (set by the repro.tune search; the
+    # executor uses it when the caller passes no explicit bn)
+    bn_hint: Optional[int] = None
 
     # --- pytree leaves (device arrays; None where not applicable) ---
     lhs_blocks: Optional[jax.Array] = None
@@ -242,15 +250,19 @@ class SegmentPlan:
                 f"stores fp32 blocks — build it with plan_matmul(..., "
                 f"quantize=...) to carry the matching scales")
 
-    def __call__(self, rhs=None, *, bn: int = 512, backend: Optional[str] = None,
+    def __call__(self, rhs=None, *, bn: Optional[int] = None,
+                 backend: Optional[str] = None,
                  interpret: Optional[bool] = None, out_dtype=None):
         """Execute the plan.
 
         spmm: ``plan(b_dense)`` → dense ``(M, N)``.
         spgemm: ``plan()`` → ``(n_out_blocks, bm, bn)`` C blocks.
 
-        ``interpret`` is a deprecated alias for ``backend`` kept for the old
-        ``ops.SpmmPlan``/``ops.SpgemmPlan`` call signature.
+        ``bn=None`` defers to the plan's tuned ``bn_hint`` (when the plan
+        came out of the :mod:`repro.tune` search) and otherwise to the
+        executor default (512).  ``interpret`` is a deprecated alias for
+        ``backend`` kept for the old ``ops.SpmmPlan``/``ops.SpgemmPlan``
+        call signature.
         """
         from . import executor  # local import: executor imports this module
         if interpret is not None:

@@ -77,19 +77,43 @@ def _pattern_bytes(h, m: BSR) -> None:
     h.update(np.ascontiguousarray(m.bcol, np.int64).tobytes())
 
 
+def _bucket_hint(n: Optional[int]) -> Optional[int]:
+    """Power-of-two ceiling bucket for the dense-N traffic hint.
+
+    The *schedule* never depends on N, but the cached unit-N traffic basis
+    is re-priced per realize and downstream consumers (the ``repro.tune``
+    cost model, the plan-time VMEM gate's ``pick_bn`` clamp) read the
+    realized numbers — so plans for wildly different widths must not share
+    a cache identity.  Bucketing to the next power of two keeps nearby
+    widths (e.g. 640 and 768 → 1024) on one entry while separating 64 from
+    640."""
+    if n is None:
+        return None
+    n = int(n)
+    return 1 << max(0, (n - 1).bit_length())
+
+
 def pattern_fingerprint(kind: str, policy_key: str, fold_len: Optional[int],
                         with_grad: bool, *mats: BSR, n_lanes: int = 1,
-                        unroll: int = 1, block_dtype: str = "fp32") -> str:
-    """Digest of everything the *schedule* depends on (never block values,
-    never the dense-N traffic hint).  ``policy_key`` should include the
-    policy's registration serial so re-registering a name under a different
-    ordering can't be served a stale schedule.  ``block_dtype`` is part of
-    the digest: a quantized plan carries scale leaves and dtype-scaled
-    traffic that an fp32 plan of the same pattern must never be served."""
+                        unroll: int = 1, block_dtype: str = "fp32",
+                        n_bucket: Optional[int] = None, pipeline: bool = True,
+                        bn_hint: Optional[int] = None) -> str:
+    """Digest of everything the *schedule* and the cached pricing depend on
+    (never block values).  ``policy_key`` should include the policy's
+    registration serial so re-registering a name under a different ordering
+    can't be served a stale schedule.  ``block_dtype`` is part of the
+    digest: a quantized plan carries scale leaves and dtype-scaled traffic
+    that an fp32 plan of the same pattern must never be served.
+    ``n_bucket`` is the *bucketed* dense-N hint (see :func:`_bucket_hint`)
+    — the raw hint stays out so nearby widths share one template, but
+    orders-of-magnitude-different widths no longer collide.  ``pipeline``
+    and ``bn_hint`` are part of the key because they change the recorded
+    traffic pricing and the executor behaviour baked into the template."""
     h = hashlib.sha1()
     h.update(f"{kind}|{policy_key}|{fold_len}|{with_grad}"
              f"|lanes={n_lanes}|unroll={unroll}"
-             f"|dtype={block_dtype}".encode())
+             f"|dtype={block_dtype}|nbkt={n_bucket}"
+             f"|pipe={pipeline}|bn={bn_hint}".encode())
     for m in mats:
         _pattern_bytes(h, m)
     return h.hexdigest()
@@ -181,20 +205,39 @@ class _PlanTemplate:
 
 
 _CACHE: Dict[str, _PlanTemplate] = {}
-_STATS = {"hits": 0, "misses": 0}
+# hits/misses: template cache; searched/search_cache_hits/dataflow_fallbacks:
+# autotune counters incremented by repro.tune.search (kept here so
+# plan_cache_stats is the one stats surface and clear_plan_cache the one
+# reset)
+_STATS = {"hits": 0, "misses": 0,
+          "searched": 0, "search_cache_hits": 0, "dataflow_fallbacks": 0}
 
 
 def clear_plan_cache() -> None:
     """Drop every cached template — all ``block_dtype`` variants included
-    (fp32 and quantized plans of one pattern are distinct entries)."""
+    (fp32 and quantized plans of one pattern are distinct entries) — and
+    the :mod:`repro.tune` schedule-search cache alongside it."""
+    import sys
     _CACHE.clear()
-    _STATS["hits"] = _STATS["misses"] = 0
+    for k in _STATS:
+        _STATS[k] = 0
+    # only if the tuner was ever imported — never import it from here (the
+    # tune package imports this module at top level)
+    ts = sys.modules.get("repro.tune.search")
+    if ts is not None:
+        ts._SEARCH_CACHE.clear()
 
 
 def plan_cache_stats() -> Dict[str, int]:
     """Hit/miss counters + cache size, with entries broken out per
     ``block_dtype`` (``by_dtype``) — quantized plans of a pattern are
-    separate cache entries from the fp32 plan of the same pattern."""
+    separate cache entries from the fp32 plan of the same pattern.
+
+    Also carries the autotune counters: ``searched`` (schedule searches
+    actually run), ``search_cache_hits`` (searches answered from the tuned
+    fingerprint cache at zero cost), and ``dataflow_fallbacks`` (times the
+    analytically best dataflow had no registered policy and the tuner fell
+    back to the best dispatchable one)."""
     by_dtype: Dict[str, int] = {}
     for tpl in _CACHE.values():
         d = tpl.plan.block_dtype
@@ -236,8 +279,9 @@ def _flag_leaves(flags: dict) -> dict:
 
 def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
                          with_grad: bool, n_lanes: int, unroll: int,
-                         fingerprint: str,
-                         block_dtype: str = "fp32") -> _PlanTemplate:
+                         fingerprint: str, block_dtype: str = "fp32",
+                         pipeline: bool = True,
+                         bn_hint: Optional[int] = None) -> _PlanTemplate:
     sched = build_spmm_schedule(a, policy=policy, fold_len=fold_len)
     fin = finalize_schedule(sched.seg_start, sched.m, n_slots=sched.n_m_blocks)
     bm, bk = a.block_shape
@@ -253,7 +297,8 @@ def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
     fetch = _fetch_schedule(layout, lane_slot, lane_k, unroll)
     basis = _quantize_a_traffic(lane_traffic_spmm(
         lane_m, lane_k, flags["seg_start"],
-        layout.valid.reshape(-1), layout.n_lanes, bm, bk, 1, unroll=unroll),
+        layout.valid.reshape(-1), layout.n_lanes, bm, bk, 1, unroll=unroll,
+        pipeline=pipeline),
         block_dtype, bm, bk)
     basis.update(layout.stats)
 
@@ -287,7 +332,7 @@ def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
         grad_basis = _quantize_a_traffic(lane_traffic_spmm(
             t_lane_m, t_lane_k, t_flags["seg_start"],
             t_layout.valid.reshape(-1), t_layout.n_lanes, bk, bm, 1,
-            unroll=unroll), block_dtype, bk, bm)
+            unroll=unroll, pipeline=pipeline), block_dtype, bk, bm)
         grad_basis.update(t_layout.stats)
         grad_plan = SegmentPlan(
             kind=SPMM, policy=policy, block_shape=(bk, bm),
@@ -297,6 +342,7 @@ def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
             fingerprint=fingerprint + ":grad",
             block_dtype=block_dtype,
             n_lanes=t_layout.n_lanes, unroll=unroll, transpose_lhs=True,
+            pipeline=pipeline, bn_hint=bn_hint,
             has_pads=bool(not t_layout.valid.all()),
             m_idx=jnp.asarray(t_lane_m.astype(np.int32)),
             k_idx=jnp.asarray(t_lane_k.astype(np.int32)),
@@ -312,6 +358,7 @@ def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
         traffic_items=(),   # re-priced per realize from traffic_basis
         fingerprint=fingerprint, block_dtype=block_dtype,
         n_lanes=layout.n_lanes, unroll=unroll,
+        pipeline=pipeline, bn_hint=bn_hint,
         has_pads=bool(not layout.valid.all()),
         m_idx=jnp.asarray(lane_m.astype(np.int32)),
         k_idx=jnp.asarray(lane_k.astype(np.int32)),
@@ -325,8 +372,9 @@ def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
 
 def _build_spgemm_template(a: BSR, b: BSR, policy: str,
                            fold_len: Optional[int], n_lanes: int, unroll: int,
-                           fingerprint: str,
-                           block_dtype: str = "fp32") -> _PlanTemplate:
+                           fingerprint: str, block_dtype: str = "fp32",
+                           pipeline: bool = True,
+                           bn_hint: Optional[int] = None) -> _PlanTemplate:
     sched = build_spgemm_schedule(a, b, policy=policy, fold_len=fold_len)
     fin = finalize_schedule(sched.seg_start, sched.c_idx)
     bm, bk = a.block_shape
@@ -343,7 +391,8 @@ def _build_spgemm_template(a: BSR, b: BSR, policy: str,
     fetch = _fetch_schedule(layout, lane_a, lane_b, unroll)
     traffic = _quantize_spgemm_traffic(lane_traffic_spgemm(
         lane_a, lane_b, lane_c, flags["seg_start"],
-        layout.valid.reshape(-1), layout.n_lanes, bm, bk, bn, unroll=unroll),
+        layout.valid.reshape(-1), layout.n_lanes, bm, bk, bn, unroll=unroll,
+        pipeline=pipeline),
         block_dtype, bm, bk, bn)
     traffic.update(layout.stats)
     plan = SegmentPlan(
@@ -352,6 +401,7 @@ def _build_spgemm_template(a: BSR, b: BSR, policy: str,
         traffic_items=_freeze_traffic(traffic),
         fingerprint=fingerprint, block_dtype=block_dtype,
         n_lanes=layout.n_lanes, unroll=unroll,
+        pipeline=pipeline, bn_hint=bn_hint,
         has_pads=bool(not layout.valid.all()),
         a_idx=jnp.asarray(lane_a.astype(np.int32)),
         b_idx=jnp.asarray(lane_b.astype(np.int32)),
@@ -404,14 +454,22 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
                 n_lanes: int = 1, unroll: int = 1, cache: bool = True,
                 quantize: Optional[str] = None,
                 out_dtype=None, verify=None,
-                vmem_limit_bytes: Optional[int] = None) -> SegmentPlan:
+                vmem_limit_bytes: Optional[int] = None,
+                pipeline: bool = True,
+                bn_hint: Optional[int] = None) -> SegmentPlan:
     """Plan a Segment-dataflow matmul for the sparsity pattern of ``a``.
 
     Args:
       a: the BSR left operand (pattern + values).
       b_or_shape: ``BSR`` (SpGEMM), or the dense rhs / its ``(K, N)`` shape /
         ``N`` (SpMM; only used as a traffic hint), or None.
-      policy: any name in the policy registry.
+      policy: any name in the policy registry, or ``"auto"`` — run the
+        :mod:`repro.tune` schedule search over the knob grid and the
+        registered dataflows and plan with the winning (policy, fold_len,
+        n_lanes, unroll, pipeline, bn) combination.  Knobs passed
+        explicitly alongside ``policy="auto"`` are treated as pins the
+        search must honour.  Winning schedules are cached by pattern
+        fingerprint, so repeat patterns pay zero search cost.
       backend: preferred execution backend recorded on the plan (resolvable
         later; ``None`` defers to the process default).
       fold_len: temporal-fold cap on segment length (fold-capable policies).
@@ -445,7 +503,13 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
         :class:`~repro.analysis.VmemBudgetError` at plan time — a bad
         (block, bn, unroll) knob combination fails here, not as an OOM at
         launch.  The N-tile width is taken as the executor default
-        (``bn=512``) clamped by ``pick_bn`` to the traffic hint's N.
+        (``bn_hint`` or 512) clamped by ``pick_bn`` to the traffic hint's N.
+      pipeline: ``False`` builds the plan for the legacy BlockSpec
+        auto-pipeline instead of the explicit DMA pipeline; the recorded
+        traffic estimate follows the same switch.
+      bn_hint: preferred executor N-tile width, used when the caller passes
+        no explicit ``bn`` at execution time (set by the :mod:`repro.tune`
+        search; ``None`` keeps the executor default of 512).
     """
     if backend is not None:
         resolve_backend(backend)   # fail fast on typos
@@ -454,6 +518,41 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
                          f"available: {tuple(QUANT_DTYPES)} or None")
     block_dtype = quantize if quantize is not None else "fp32"
     out_dtype = None if out_dtype is None else jnp.dtype(out_dtype).name
+    if policy == "auto":
+        # dataflow selection + knob search live in repro.tune; import
+        # lazily so the plain build path never pays for (or cycles with)
+        # the tuner.  Explicit knobs become pins the search must honour.
+        from repro.tune.search import select_schedule
+        b0, hint0 = _rhs_to_hint(a, b_or_shape)
+        if n_cols_hint is not None:
+            hint0 = n_cols_hint
+        pins: Dict[str, object] = {}
+        if fold_len is not None:
+            pins["fold_len"] = fold_len
+        if n_lanes != 1:
+            pins["n_lanes"] = n_lanes
+        if unroll != 1:
+            pins["unroll"] = unroll
+        if pipeline is not True:
+            pins["pipeline"] = pipeline
+        if bn_hint is not None:
+            pins["bn"] = bn_hint
+        # tune for the backend the plan will actually run on: the compiled
+        # model prices lanes as concurrent grid dimensions, the interpret
+        # model prices the grid sequentially
+        objective = ("tpu" if resolve_backend(backend) == "pallas"
+                     else "interpret")
+        best = select_schedule(a, b0, n_cols_hint=hint0, with_grad=with_grad,
+                               quantize=quantize, objective=objective,
+                               vmem_limit_bytes=vmem_limit_bytes, pins=pins)
+        return plan_matmul(
+            a, b_or_shape, policy=best.policy, backend=backend,
+            fold_len=best.fold_len, with_grad=with_grad,
+            n_cols_hint=n_cols_hint, n_lanes=best.n_lanes,
+            unroll=best.unroll, cache=cache, quantize=quantize,
+            out_dtype=out_dtype, verify=verify,
+            vmem_limit_bytes=vmem_limit_bytes, pipeline=best.pipeline,
+            bn_hint=best.bn)
     pol = get_policy(policy)       # fail fast + serial for the cache key
     b, hint = _rhs_to_hint(a, b_or_shape)
     if n_cols_hint is not None:
@@ -465,16 +564,21 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
     mats = (a, b) if b is not None else (a,)
     key = pattern_fingerprint(kind, f"{policy}#{pol.serial}", fold_len,
                               with_grad, *mats, n_lanes=n_lanes,
-                              unroll=unroll, block_dtype=block_dtype)
+                              unroll=unroll, block_dtype=block_dtype,
+                              n_bucket=_bucket_hint(hint) if b is None
+                              else None,
+                              pipeline=pipeline, bn_hint=bn_hint)
     level = _resolve_verify(verify)
     tpl = _CACHE.get(key) if cache else None
     if tpl is None:
         if kind == SPMM:
             tpl = _build_spmm_template(a, policy, fold_len, with_grad,
-                                       n_lanes, unroll, key, block_dtype)
+                                       n_lanes, unroll, key, block_dtype,
+                                       pipeline=pipeline, bn_hint=bn_hint)
         else:
             tpl = _build_spgemm_template(a, b, policy, fold_len, n_lanes,
-                                         unroll, key, block_dtype)
+                                         unroll, key, block_dtype,
+                                         pipeline=pipeline, bn_hint=bn_hint)
         _STATS["misses"] += 1   # a build is a miss whether or not it's kept
         if cache:
             _CACHE[key] = tpl
@@ -503,7 +607,7 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
         from repro.analysis.budget import check_plan_vmem
 
         from .executor import pick_bn
-        bn_eff, _ = pick_bn(max(1, hint), 512)
+        bn_eff, _ = pick_bn(max(1, hint), bn_hint or 512)
         check_plan_vmem(plan, bn=bn_eff, limit=vmem_limit_bytes,
                         label=f"plan_matmul[{kind}]")
     return plan

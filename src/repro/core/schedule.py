@@ -159,6 +159,62 @@ def _segment_order(m: np.ndarray, k: np.ndarray) -> np.ndarray:
 # SpGEMM by treating the C slot as the "row" and k as the shared operand.
 # ---------------------------------------------------------------------------
 
+
+def _static_cost_hint(policy_name: str):
+    """Closed-form ``SchedulePolicy.cost_hint`` for a *static* order.
+
+    A static policy's schedule is fully determined by its order function, so
+    its default-knob traffic (one lane, fp32, pipelined) can be priced
+    exactly by applying the order and evaluating the revisiting model over
+    the *lane-major* item order — :func:`partition_lanes` round-robins
+    segments even at one lane, so the hint runs the same layout the planner
+    builds, not the raw static order.  No fetch-flag compilation or device
+    upload happens.  This is what :mod:`repro.tune` and
+    :func:`repro.sim.baselines.dataflow_estimates` score dataflows with
+    before any candidate plan is built.  Exactness is pinned by
+    ``tests/test_autotune.py`` against the built plans' recorded traffic.
+    """
+
+    def _lane_order(owner_o: np.ndarray, seg_start: np.ndarray):
+        fin = finalize_schedule(seg_start, owner_o)
+        layout = partition_lanes(owner_o, 1, policy=policy_name,
+                                 seg_start=seg_start,
+                                 seg_write=_seg_write_from_starts(seg_start),
+                                 accum_prev=fin.accum_prev)
+        return layout, lane_select(layout, seg_start, zero_pads=True)
+
+    def hint(kind: str, **kw) -> Optional[dict]:
+        pol = get_policy(policy_name)
+        if kind == "spmm":
+            m = np.asarray(kw["m"], dtype=np.int64)
+            k = np.asarray(kw["k"], dtype=np.int64)
+            order = pol.spmm_order(m, k)
+            m_o, k_o = m[order], k[order]
+            layout, ss = _lane_order(m_o, _runs_from_sorted(m_o))
+            return lane_traffic_spmm(
+                lane_select(layout, m_o), lane_select(layout, k_o), ss,
+                layout.valid.reshape(-1), layout.n_lanes, kw["bm"], kw["bk"],
+                kw["n_cols"], bytes_per_el=kw.get("bytes_per_el", 4))
+        if kind == "spgemm":
+            m = np.asarray(kw["m"], dtype=np.int64)
+            n = np.asarray(kw["n"], dtype=np.int64)
+            k = np.asarray(kw["k"], dtype=np.int64)
+            c = np.asarray(kw["c"], dtype=np.int64)
+            order = pol.spgemm_order(m, n, k, c)
+            c_o = c[order]
+            layout, ss = _lane_order(c_o, _runs_from_sorted(c_o))
+            return lane_traffic_spgemm(
+                lane_select(layout, np.asarray(kw["a_idx"])[order]),
+                lane_select(layout, np.asarray(kw["b_idx"])[order]),
+                lane_select(layout, c_o), ss,
+                layout.valid.reshape(-1), layout.n_lanes,
+                kw["bm"], kw["bk"], kw["bn"],
+                bytes_per_el=kw.get("bytes_per_el", 4))
+        return None
+
+    return hint
+
+
 register_policy(
     "segment",
     spmm_order=_segment_order,
@@ -172,12 +228,14 @@ register_policy(
     spmm_order=lambda m, k: np.lexsort((k, m)),
     spgemm_order=lambda m, n, k, c: np.lexsort((k, n, m)),
     description="m-major static order (best classic static dataflow on TPU)",
+    cost_hint=_static_cost_hint("gustavson"),
     overwrite=True)
 register_policy(
     "outer",
     spmm_order=lambda m, k: np.lexsort((m, k)),
     spgemm_order=lambda m, n, k, c: np.lexsort((n, m, k)),
     description="k-major static order (outer-product-like; B reuse, C thrash)",
+    cost_hint=_static_cost_hint("outer"),
     overwrite=True)
 
 

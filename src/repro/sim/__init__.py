@@ -1,7 +1,7 @@
 """Cycle-approximate evaluation substrate for the paper's figures."""
 from .segfold_sim import SegFoldConfig, SimResult, simulate_segfold
-from .baselines import (flexagon_best, flexagon_gust, flexagon_ip,
-                        flexagon_op, spada)
+from .baselines import (dataflow_estimates, flexagon_best, flexagon_gust,
+                        flexagon_ip, flexagon_op, spada)
 from . import matrices
 
 ACCELERATORS = {
@@ -13,6 +13,6 @@ ACCELERATORS = {
 
 __all__ = [
     "SegFoldConfig", "SimResult", "simulate_segfold",
-    "ACCELERATORS", "flexagon_best", "flexagon_gust",
+    "ACCELERATORS", "dataflow_estimates", "flexagon_best", "flexagon_gust",
     "flexagon_ip", "flexagon_op", "spada", "matrices",
 ]

@@ -164,3 +164,85 @@ def spada(a: CSR, b: CSR, cfg: Optional[SegFoldConfig] = None,
         tail_cap=base.pe_cols)  # tile-level adaptation splits dense rows
     return _k_synchronous_run(a, b, run, window_candidates, adapt=True,
                               steal=steal)
+
+
+# ---------------------------------------------------------------------------
+# closed-form dataflow traffic estimates over a BSR block pattern
+# ---------------------------------------------------------------------------
+
+
+def _inner_product_estimate(kind: str, *, bm: int, bk: int,
+                            n_cols: Optional[int] = None,
+                            bn: Optional[int] = None,
+                            bytes_per_el: int = 4, **coords) -> dict:
+    """ExTensor-like inner-product traffic over a block pattern.
+
+    Inner product enumerates candidate outputs and streams both operand
+    fibers per output with no inter-item operand reuse: every work item
+    re-fetches its A block and B stripe, and each output tile is written
+    exactly once.  This is a lower bound on what a real inner-product
+    machine moves (intersection misses would add fiber traffic), yet it is
+    already never below Gustavson's adjacency-reuse counts — which is the
+    point: it exists as a comparison dataflow for the tuner's scoring, not
+    as a dispatch target (no registered policy executes it)."""
+    if kind == "spmm":
+        m = np.asarray(coords["m"])
+        items = int(m.size)
+        n = 1 if n_cols is None else int(n_cols)
+        a_bytes = items * bm * bk * bytes_per_el
+        b_bytes = items * bk * n * bytes_per_el
+        n_out = int(np.unique(m).size)
+        c_bytes = n_out * bm * n * bytes_per_el
+    elif kind == "spgemm":
+        c = np.asarray(coords["c"])
+        items = int(c.size)
+        bn_eff = bk if bn is None else int(bn)
+        a_bytes = items * bm * bk * bytes_per_el
+        b_bytes = items * bk * bn_eff * bytes_per_el
+        n_out = int(np.unique(c).size)
+        c_bytes = n_out * bm * bn_eff * bytes_per_el
+    else:
+        raise ValueError(f"unknown kind {kind!r}")
+    return dict(a_bytes=a_bytes, b_bytes=b_bytes, c_bytes=c_bytes,
+                total=a_bytes + b_bytes + c_bytes,
+                a_fetches=items, b_fetches=items, c_segments=n_out)
+
+
+def dataflow_estimates(kind: str, *, bm: int, bk: int,
+                       n_cols: Optional[int] = None,
+                       bn: Optional[int] = None,
+                       bytes_per_el: int = 4, **coords) -> dict:
+    """Closed-form traffic estimates per dataflow for one block pattern.
+
+    Walks the policy registry and calls each policy's ``cost_hint`` (see
+    :class:`repro.core.policies.SchedulePolicy`) — exact revisiting-model
+    counts for the static orders that carry one (``gustavson``, ``outer``)
+    — then adds the analytic ``"inner"`` inner-product estimate, which has
+    no registered policy and exists for comparison only.  Policies without
+    a hint (``segment``: its order *is* the schedule) are skipped; the
+    tuner scores those by building the schedule.
+
+    ``coords`` carries the pattern: ``m``/``k`` block coordinates for
+    ``kind="spmm"``; ``m``/``n``/``k``/``c``/``a_idx``/``b_idx`` for
+    ``kind="spgemm"``.  Returns ``{name: traffic_dict}`` with
+    :func:`repro.core.schedule.lane_traffic_spmm`-shaped dicts priced at
+    default knobs (one lane, pipelined), so entries are directly comparable
+    with each other and with a built plan's recorded traffic."""
+    from repro.core.policies import available_policies, get_policy
+    tiles = dict(bm=bm, bk=bk, bytes_per_el=bytes_per_el)
+    if kind == "spmm":
+        tiles["n_cols"] = 1 if n_cols is None else int(n_cols)
+    else:
+        tiles["bn"] = bk if bn is None else int(bn)
+    out = {}
+    for name in available_policies():
+        hint = get_policy(name).cost_hint
+        if hint is None:
+            continue
+        est = hint(kind, **coords, **tiles)
+        if est is not None:
+            out[name] = est
+    out["inner"] = _inner_product_estimate(
+        kind, bm=bm, bk=bk, n_cols=n_cols, bn=bn,
+        bytes_per_el=bytes_per_el, **coords)
+    return out

@@ -1,0 +1,22 @@
+"""``repro.tune`` — analytical schedule search and dataflow selection.
+
+Given a sparsity pattern, :func:`autotune_matmul` sweeps the planner's knob
+grid against a unified analytical cost model — no candidate ever executes —
+and returns a ranked, statically verified winner whose knobs
+:func:`repro.api.plan_matmul` re-enters with (``policy="auto"`` does exactly
+that).  See :mod:`repro.tune.search` for the mechanics and
+:mod:`repro.tune.cost` for the model.
+
+This package imports :mod:`repro.api`; the API layer only ever imports the
+tuner lazily inside ``plan_matmul`` (``scripts/ci.sh`` lints the layering),
+so plain planning never pays for the search machinery.
+"""
+from .cost import DEFAULT_INTERPRET, DEFAULT_TPU, CostModel, calibrate
+from .search import (Candidate, Scored, SearchSpace, TuneResult,
+                     autotune_matmul, select_schedule)
+
+__all__ = [
+    "CostModel", "calibrate", "DEFAULT_TPU", "DEFAULT_INTERPRET",
+    "Candidate", "Scored", "SearchSpace", "TuneResult",
+    "autotune_matmul", "select_schedule",
+]

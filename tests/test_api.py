@@ -254,17 +254,24 @@ def test_plan_cache_counts_uncached_builds_as_misses():
     api.clear_plan_cache()
 
 
-def test_plan_cache_shared_across_dense_widths():
-    """The dense-N hint prices the traffic estimate but never the schedule:
-    plans for the same pattern at different N share one cache entry."""
+def test_plan_cache_buckets_dense_widths():
+    """The dense-N hint is folded into the cache key *bucketed* to the next
+    power of two: nearby widths share one entry (640 and 768 → 1024), but
+    widths an order of magnitude apart (64 vs 640) get separate entries —
+    the regression the old hint-blind key allowed, where a 640-wide
+    caller was served pricing keyed to a 64-wide build."""
     api.clear_plan_cache()
     a = BSR.random(np.random.default_rng(12), (64, 64), (32, 32), 0.9)
     p1 = api.plan_matmul(a, (64, 64))
     p2 = api.plan_matmul(a, (64, 640))
     s = api.plan_cache_stats()
-    assert s["misses"] == 1 and s["hits"] == 1
-    # traffic still reflects each caller's N
+    assert s["misses"] == 2 and s["hits"] == 0   # different buckets
+    p3 = api.plan_matmul(a, (64, 768))           # same 1024 bucket as 640
+    s = api.plan_cache_stats()
+    assert s["misses"] == 2 and s["hits"] == 1
+    # traffic still reflects each caller's exact N, bucket-mates included
     assert p2.traffic["total"] > p1.traffic["total"]
+    assert p3.traffic["total"] > p2.traffic["total"]
     assert p2.traffic["b_fetches"] == p1.traffic["b_fetches"]
     api.clear_plan_cache()
 
