@@ -68,14 +68,41 @@ EOF
 echo "== serve bench smoke =="
 # end-to-end continuous-batching engine + throughput tracking from this PR
 # on: BENCH_serve.json carries prefill/decode tok/s for the perf trajectory.
-python benchmarks/serve_bench.py --smoke --out BENCH_serve.json
+python benchmarks/serve_bench.py --smoke --quant-repeats 5 --out BENCH_serve.json
 python - <<'EOF'
 import json
 d = json.load(open("BENCH_serve.json"))
 assert d["prefill_tok_s"] > 0 and d["decode_tok_s"] > 0, d
 assert not d["retraced_after_warmup"], d["compiled_shapes"]
+# quantized serving (fp32/int8/fp8 engines on the block-sparse-FFN
+# variant): every quantized plan the bench builds verifies clean at
+# level="full", no engine retraces after warmup, greedy drift vs fp32
+# stays inside the documented bounds, and int8 decode throughput is no
+# worse than fp32 modulo noise — the 0.85 floor is what the tiny smoke
+# decode phase (requests x max_new = 16 tokens/pass) supports on a loaded
+# runner even with 5 interleaved best-of passes (interpret mode moves the
+# same flops either way; the weight-byte win needs real hardware), while
+# the full-config artifact tracks the raw ratio for the perf trajectory
+q = d["quant"]["modes"]
+for mode in ("fp32", "int8", "fp8"):
+    assert q[mode]["decode_tok_s"] > 0, (mode, q[mode])
+    assert not q[mode]["retraced_after_warmup"], (mode, q[mode])
+for mode, drift_bound in (("int8", 0.25), ("fp8", 0.5)):
+    assert q[mode]["verify_findings"] == 0, (mode, q[mode])
+    assert q[mode]["greedy_drift_fraction"] <= drift_bound, (mode, q[mode])
+    # the deterministic form of the quantization win: modeled FFN weight
+    # bytes per decode step must drop at least 2x vs fp32 (1-byte payloads
+    # + fp32 scales price out near 4x; 2x leaves headroom for rowwise)
+    assert q[mode]["ffn_weight_traffic_cut_vs_fp32"] >= 2.0, (mode, q[mode])
+assert q["int8"]["decode_tok_s"] >= 0.85 * q["fp32"]["decode_tok_s"], \
+    (q["int8"]["decode_tok_s"], q["fp32"]["decode_tok_s"])
 print(f"serve bench OK: prefill {d['prefill_tok_s']:.1f} tok/s, "
-      f"decode {d['decode_tok_s']:.1f} tok/s")
+      f"decode {d['decode_tok_s']:.1f} tok/s; quant decode fp32 "
+      f"{q['fp32']['decode_tok_s']:.1f} / int8 "
+      f"{q['int8']['decode_tok_s']:.1f} / fp8 "
+      f"{q['fp8']['decode_tok_s']:.1f} tok/s, int8 drift "
+      f"{q['int8']['greedy_drift_fraction']:.3f}, int8 weight-byte cut "
+      f"{q['int8']['ffn_weight_traffic_cut_vs_fp32']:.2f}x")
 EOF
 
 echo "== kernel bench smoke =="

@@ -54,7 +54,7 @@ PATTERNS = (
 
 SPMM_GRID = tuple(
     dict(n_lanes=l, unroll=u, quantize=q)
-    for l in (1, 2, 4) for u in (1, 2) for q in (None, "int8"))
+    for l in (1, 2, 4) for u in (1, 2) for q in (None, "int8", "int8.rowwise"))
 SPGEMM_GRID = tuple(
     dict(n_lanes=l, unroll=u) for l in (1, 2) for u in (1, 2))
 

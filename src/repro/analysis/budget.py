@@ -107,19 +107,22 @@ def spmm_vmem_bytes(*, bm: int, bk: int, bn: int, unroll: int,
                     transpose_lhs: bool = False,
                     block_dtype="float32", rhs_dtype="float32",
                     out_dtype="float32", quantized: bool = False,
-                    pipelined: bool = True) -> int:
+                    rowwise: bool = False, pipelined: bool = True) -> int:
     """VMEM bytes of one ``segment_spmm`` kernel instance.
 
     Pipelined: ``acc(row·bn·4) + out window(row·bn·2) + A ring
     (2·unroll·bm·bk) + B ring (2·unroll·contract·bn)`` plus, when
-    quantized, the per-step scale window.  Legacy: the BlockSpec
+    quantized, the per-step scale window — ``(1, unroll)`` fp32 per-block,
+    ``(1, unroll, bm)`` in rowwise mode.  Legacy: the BlockSpec
     auto-pipeline double-buffers ``unroll`` A tiles and ``unroll`` B
-    stripes instead of the explicit rings (quantized scales ride the SMEM
-    prefetch path there — no VMEM).
+    stripes instead of the explicit rings (per-block scales ride the SMEM
+    prefetch path there — no VMEM — but rowwise scale rows are ``unroll``
+    windowed ``(1, bm)`` VMEM operands).
     """
     row_blk, contract_blk = (bk, bm) if transpose_lhs else (bm, bk)
     a_item = _itemsize(block_dtype)
     b_item = _itemsize(rhs_dtype)
+    scale_elems = bm if rowwise else 1   # rowwise runs over storage rows
     total = row_blk * bn * 4                                     # acc
     total += row_blk * bn * _itemsize(out_dtype) * _BLOCK_BUFFERS  # out win
     if pipelined:
@@ -127,41 +130,53 @@ def spmm_vmem_bytes(*, bm: int, bk: int, bn: int, unroll: int,
         total += depth * bm * bk * a_item                        # A ring
         total += depth * contract_blk * bn * b_item              # B ring
         if quantized:
-            total += 1 * unroll * 4 * _BLOCK_BUFFERS             # scale win
+            total += unroll * scale_elems * 4 * _BLOCK_BUFFERS   # scale win
     else:
         total += unroll * (1 * bm * bk) * a_item * _BLOCK_BUFFERS
         total += unroll * (contract_blk * bn) * b_item * _BLOCK_BUFFERS
+        if quantized and rowwise:
+            total += unroll * (1 * bm) * 4 * _BLOCK_BUFFERS
     return total
 
 
 def spgemm_vmem_bytes(*, bm: int, bk: int, bn: int, unroll: int,
                       block_dtype="float32", rhs_dtype=None,
                       out_dtype="float32", quant_a: bool = False,
-                      quant_b: bool = False, pipelined: bool = True) -> int:
+                      quant_b: bool = False, rowwise: bool = False,
+                      pipelined: bool = True) -> int:
     """VMEM bytes of one ``segment_spgemm`` kernel instance (same
-    accounting as :func:`spmm_vmem_bytes`, block×block operand streams)."""
+    accounting as :func:`spmm_vmem_bytes`, block×block operand streams;
+    rowwise scale windows span A's ``bm`` rows and B's ``bk`` rows)."""
     a_item = _itemsize(block_dtype)
     b_item = _itemsize(rhs_dtype if rhs_dtype is not None else block_dtype)
+    a_scale = bm if rowwise else 1
+    b_scale = bk if rowwise else 1
     total = bm * bn * 4                                          # acc
     total += 1 * bm * bn * _itemsize(out_dtype) * _BLOCK_BUFFERS   # out win
     if pipelined:
         depth = 2 * unroll
         total += depth * bm * bk * a_item
         total += depth * bk * bn * b_item
-        total += (int(quant_a) + int(quant_b)) * unroll * 4 * _BLOCK_BUFFERS
+        total += (int(quant_a) * a_scale
+                  + int(quant_b) * b_scale) * unroll * 4 * _BLOCK_BUFFERS
     else:
         total += unroll * (1 * bm * bk) * a_item * _BLOCK_BUFFERS
         total += unroll * (1 * bk * bn) * b_item * _BLOCK_BUFFERS
+        if rowwise:
+            total += (int(quant_a) * a_scale + int(quant_b) * b_scale) \
+                * unroll * 4 * _BLOCK_BUFFERS
     return total
 
 
 #: plan ``block_dtype`` names → payload bytes per element (the plan stores
-#: the short quantization name, not a numpy dtype string)
-_PLAN_DTYPE_BYTES = {"fp32": 4, "int8": 1, "fp8": 1}
+#: the short quantization mode, not a numpy dtype string)
+_PLAN_DTYPE_BYTES = {"fp32": 4, "int8": 1, "fp8": 1,
+                     "int8.rowwise": 1, "fp8.rowwise": 1}
 
 
 def _plan_block_dtype(plan) -> str:
     name = str(getattr(plan, "block_dtype", "fp32") or "fp32")
+    name = name.split(".", 1)[0]   # strip a scale-granularity suffix
     return {"fp32": "float32", "int8": "int8",
             "fp8": "float8_e4m3fn"}.get(name, name)
 
@@ -178,6 +193,7 @@ def plan_vmem_bytes(plan, *, bn: int = 512, pipelined: Optional[bool] = None
     bm, bk = plan.block_shape
     dt = _plan_block_dtype(plan)
     quantized = plan.lhs_scales is not None
+    rowwise = quantized and getattr(plan.lhs_scales, "ndim", 1) == 2
     unroll = max(1, int(plan.unroll or 1))
     if pipelined is None:
         # a plan built with pipeline=False carries the fetch-flag leaves
@@ -194,12 +210,12 @@ def plan_vmem_bytes(plan, *, bn: int = 512, pipelined: Optional[bool] = None
             bm=bm, bk=bk, bn=bn_eff, unroll=unroll, block_dtype=dt,
             rhs_dtype=rhs_dt,
             quant_a=quantized, quant_b=plan.rhs_scales is not None,
-            pipelined=pipelined)
+            rowwise=rowwise, pipelined=pipelined)
     else:
         total = spmm_vmem_bytes(bm=bm, bk=bk, bn=bn, unroll=unroll,
                                 transpose_lhs=plan.transpose_lhs,
                                 block_dtype=dt, quantized=quantized,
-                                pipelined=pipelined)
+                                rowwise=rowwise, pipelined=pipelined)
     grad = plan.grad_plan
     if grad is not None:
         total = max(total, plan_vmem_bytes(grad, bn=bn, pipelined=pipelined))

@@ -39,7 +39,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.formats import QUANT_DTYPES
+from repro.core.formats import (QUANT_DTYPES, quant_base_dtype,
+                                quant_is_rowwise)
 from repro.core.schedule import (fetch_flags, lane_traffic_spgemm,
                                  lane_traffic_spmm)
 
@@ -487,7 +488,8 @@ def _check_scales(plan, path: str) -> List[Finding]:
                       getattr(plan, "rhs_scales", None)))
     for side, blocks, scales in pairs:
         if quant:
-            want = QUANT_DTYPES[plan.block_dtype]
+            rowwise = quant_is_rowwise(plan.block_dtype)
+            want = QUANT_DTYPES[quant_base_dtype(plan.block_dtype)]
             if blocks is not None and np.dtype(blocks.dtype) != want:
                 out.append(Finding(
                     "scale-agreement",
@@ -501,20 +503,25 @@ def _check_scales(plan, path: str) -> List[Finding]:
                     f"{side}_scales — dequantization is impossible",
                     path=path))
             if scales is not None:
-                n_blocks = (None if blocks is None
-                            else int(blocks.shape[0]))
                 if np.dtype(scales.dtype) != np.float32:
                     out.append(Finding(
                         "scale-agreement",
                         f"{side}_scales dtype {np.dtype(scales.dtype)} "
                         f"must be float32", path=path))
-                if n_blocks is not None \
-                        and tuple(scales.shape) != (n_blocks,):
-                    out.append(Finding(
-                        "scale-agreement",
-                        f"{side}_scales shape {tuple(scales.shape)} must be "
-                        f"one fp32 scale per stored block ({n_blocks},)",
-                        path=path))
+                if blocks is not None:
+                    # rowwise scales run over the block's *storage* rows
+                    # (bm for lhs, bk for a SpGEMM rhs)
+                    expect = ((int(blocks.shape[0]), int(blocks.shape[1]))
+                              if rowwise else (int(blocks.shape[0]),))
+                    if tuple(scales.shape) != expect:
+                        gran = ("per block row" if rowwise
+                                else "per stored block")
+                        out.append(Finding(
+                            "scale-agreement",
+                            f"{side}_scales shape {tuple(scales.shape)} "
+                            f"must be one fp32 scale {gran} {expect} for "
+                            f"block_dtype={plan.block_dtype!r}",
+                            path=path))
         else:
             if scales is not None:
                 out.append(Finding(

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.formats import QUANT_DTYPES
+from repro.core.formats import QUANT_DTYPES, quant_base_dtype
 
 SPMM = "spmm"
 SPGEMM = "spgemm"
@@ -237,7 +237,7 @@ class SegmentPlan:
         a way no shape check catches."""
         got = np.dtype(jnp.result_type(blocks))
         if self.quantized:
-            expect = QUANT_DTYPES[self.block_dtype]
+            expect = QUANT_DTYPES[quant_base_dtype(self.block_dtype)]
             if got != expect:
                 raise ValueError(
                     f"{name} has dtype {got}, but this plan stores "

@@ -39,8 +39,9 @@ import numpy as np
 
 from repro.analysis.invariants import (PlanVerificationError, VerifyResult,
                                        check_scale_agreement, verify_plan)
-from repro.core.formats import (BSR, QUANT_DTYPES, QuantizedBlocks,
-                                quantize_blocks)
+from repro.core.formats import (BSR, QUANT_DTYPES, QUANT_MODES,
+                                QuantizedBlocks, quant_base_dtype,
+                                quant_is_rowwise, quantize_blocks)
 from repro.core.policies import get_policy
 from repro.core.schedule import (LaneLayout, build_spgemm_schedule,
                                  build_spmm_schedule, fetch_flags,
@@ -119,31 +120,42 @@ def pattern_fingerprint(kind: str, policy_key: str, fold_len: Optional[int],
     return h.hexdigest()
 
 
+def _scale_fetch_bytes(block_dtype: str, rows: int) -> int:
+    """fp32 scale bytes a quantized tile fetch drags along: one scalar per
+    block, or one per block row in rowwise mode."""
+    return (rows if quant_is_rowwise(block_dtype) else 1) * 4
+
+
 def _quantize_a_traffic(basis: dict, block_dtype: str, bm: int,
                         bk: int) -> dict:
     """Re-price a traffic estimate's A-tile bytes for a quantized payload.
 
-    An A fetch moves ``bm·bk`` payload bytes plus one fp32 scale instead of
-    ``bm·bk`` fp32 elements; B/C stay fp32 (the dense rhs and the fp32
-    accumulator output are not quantized)."""
+    An A fetch moves ``bm·bk`` payload bytes plus the fp32 scales (one per
+    block, or ``bm`` per block in rowwise mode) instead of ``bm·bk`` fp32
+    elements; B/C stay fp32 (the dense rhs and the fp32 accumulator output
+    are not quantized)."""
     if block_dtype == "fp32":
         return basis
-    itemsize = QUANT_DTYPES[block_dtype].itemsize
+    itemsize = QUANT_DTYPES[quant_base_dtype(block_dtype)].itemsize
     out = dict(basis)
-    out["a_bytes"] = basis["a_fetches"] * (bm * bk * itemsize + 4)
+    out["a_bytes"] = basis["a_fetches"] * (
+        bm * bk * itemsize + _scale_fetch_bytes(block_dtype, bm))
     out["total"] = out["a_bytes"] + out["b_bytes"] + out["c_bytes"]
     return out
 
 
 def _quantize_spgemm_traffic(traffic: dict, block_dtype: str, bm: int,
                              bk: int, bn: int) -> dict:
-    """Same re-pricing for SpGEMM, where both operands are quantized."""
+    """Same re-pricing for SpGEMM, where both operands are quantized
+    (B's rowwise scales run over its ``bk`` rows)."""
     if block_dtype == "fp32":
         return traffic
-    itemsize = QUANT_DTYPES[block_dtype].itemsize
+    itemsize = QUANT_DTYPES[quant_base_dtype(block_dtype)].itemsize
     out = dict(traffic)
-    out["a_bytes"] = traffic["a_fetches"] * (bm * bk * itemsize + 4)
-    out["b_bytes"] = traffic["b_fetches"] * (bk * bn * itemsize + 4)
+    out["a_bytes"] = traffic["a_fetches"] * (
+        bm * bk * itemsize + _scale_fetch_bytes(block_dtype, bm))
+    out["b_bytes"] = traffic["b_fetches"] * (
+        bk * bn * itemsize + _scale_fetch_bytes(block_dtype, bk))
     out["total"] = out["a_bytes"] + out["b_bytes"] + out["c_bytes"]
     return out
 
@@ -484,8 +496,11 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
       quantize: ``"int8"`` / ``"fp8"`` store block values as a quantized
         payload + per-block fp32 scales, dequantized in-kernel at the fp32
         accumulator (both operands for SpGEMM; the dense rhs stays fp32).
-        ``None`` keeps fp32 storage.  Quantized and fp32 plans of one
-        pattern never share a cache entry or fingerprint.
+        ``"int8.rowwise"`` / ``"fp8.rowwise"`` carry one fp32 scale per
+        *block row* instead — better resolution on outlier-heavy weights,
+        dequantized before the MXU dot.  ``None`` keeps fp32 storage.
+        Quantized and fp32 plans of one pattern never share a cache entry
+        or fingerprint (the mode string is the plan's ``block_dtype``).
       out_dtype: default dtype of the written output tiles (resolved at
         execution; overridable per call).  Accumulation stays fp32.
       verify: run the static schedule verifier
@@ -513,9 +528,9 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
     """
     if backend is not None:
         resolve_backend(backend)   # fail fast on typos
-    if quantize is not None and quantize not in QUANT_DTYPES:
+    if quantize is not None and quantize not in QUANT_MODES:
         raise ValueError(f"unknown quantize dtype {quantize!r}; "
-                         f"available: {tuple(QUANT_DTYPES)} or None")
+                         f"available: {QUANT_MODES} or None")
     block_dtype = quantize if quantize is not None else "fp32"
     out_dtype = None if out_dtype is None else jnp.dtype(out_dtype).name
     if policy == "auto":

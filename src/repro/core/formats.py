@@ -300,28 +300,66 @@ QUANT_DTYPES = {
 #: absmax maps onto this value, so the full quantization range is used.
 QUANT_MAX = {"int8": 127.0, "fp8": 448.0}
 
+#: Scale granularity suffix.  A quantization *mode* is either a bare payload
+#: dtype (``"int8"`` — one fp32 scale per block) or ``"<dtype>.rowwise"``
+#: (``"int8.rowwise"`` — one fp32 scale per *row of each block*, shape
+#: ``(nblocks, bm)``, for outlier-heavy weights where a single hot row
+#: would otherwise crush the whole block's resolution).
+ROWWISE_SUFFIX = ".rowwise"
+
+#: Every accepted quantization mode string.
+QUANT_MODES = tuple(QUANT_DTYPES) + tuple(
+    d + ROWWISE_SUFFIX for d in QUANT_DTYPES)
+
+
+def quant_base_dtype(mode: str) -> str:
+    """Payload dtype name of a quantization mode (``"int8.rowwise"`` → ``"int8"``).
+
+    ``"fp32"`` (the unquantized plan sentinel) passes through unchanged so
+    callers can feed ``plan.block_dtype`` directly.
+    """
+    base = mode.split(".", 1)[0]
+    return base
+
+
+def quant_is_rowwise(mode: str) -> bool:
+    """True when ``mode`` carries per-row-of-block scales."""
+    return mode.endswith(ROWWISE_SUFFIX)
+
 
 def _check_quant_dtype(dtype: str) -> str:
-    if dtype not in QUANT_DTYPES:
+    """Validate a quantization *mode* string; returns it unchanged.
+
+    Accepts bare payload dtypes and their ``.rowwise`` variants."""
+    if quant_base_dtype(dtype) not in QUANT_DTYPES or (
+            "." in dtype and not quant_is_rowwise(dtype)):
         raise ValueError(f"unknown quantized block dtype {dtype!r}; "
-                         f"available: {tuple(QUANT_DTYPES)}")
+                         f"available: {QUANT_MODES}")
     return dtype
 
 
 @dataclasses.dataclass
 class QuantizedBlocks:
-    """Quantized BSR block values: low-precision payload + per-block scales.
+    """Quantized BSR block values: low-precision payload + fp32 scales.
 
-    ``payload[i]`` holds block ``i``'s tile in ``QUANT_DTYPES[dtype]``;
-    ``scales[i]`` is the fp32 multiplier that restores magnitudes
-    (``dequant = payload.astype(f32) * scales[i]``).  Block order is the
-    carrier BSR's storage order — quantization never reorders, so realizing
-    a quantized plan uploads both arrays verbatim (the zero-copy contract).
+    ``payload[i]`` holds block ``i``'s tile in
+    ``QUANT_DTYPES[quant_base_dtype(dtype)]``.  Scale granularity follows
+    the mode string in ``dtype``:
+
+    * per-block (``"int8"``, ``"fp8"``): ``scales`` is ``(nblocks,)`` and
+      ``dequant = payload.astype(f32) * scales[i]``;
+    * per-row-of-block (``"int8.rowwise"``, ``"fp8.rowwise"``): ``scales``
+      is ``(nblocks, bm)`` and ``dequant = payload.astype(f32) *
+      scales[i][:, None]``.
+
+    Block order is the carrier BSR's storage order — quantization never
+    reorders, so realizing a quantized plan uploads both arrays verbatim
+    (the zero-copy contract).
     """
 
     payload: np.ndarray   # (nblocks, bm, bk) int8 or float8_e4m3fn
-    scales: np.ndarray    # (nblocks,) float32, strictly positive
-    dtype: str            # key into QUANT_DTYPES
+    scales: np.ndarray    # (nblocks,) or (nblocks, bm) float32, positive
+    dtype: str            # quantization mode (key into QUANT_MODES)
 
     @property
     def nblocks(self) -> int:
@@ -339,43 +377,59 @@ class QuantizedBlocks:
 
 
 def quantize_blocks(blocks, dtype: str = "int8") -> QuantizedBlocks:
-    """Per-block absmax quantization of a ``(nblocks, bm, bk)`` tile array.
+    """Absmax quantization of a ``(nblocks, bm, bk)`` tile array.
 
-    Each block's scale is ``absmax / QUANT_MAX[dtype]`` so the block's
-    largest element lands exactly on the dtype's largest magnitude.  An
-    all-zero block gets ``scale = 1.0`` (payload is all zeros anyway) —
-    the scale is never zero, so dequantization can never produce NaN/inf.
+    Per-block modes scale each block by ``absmax / QUANT_MAX`` so the
+    block's largest element lands exactly on the dtype's largest magnitude;
+    ``.rowwise`` modes do the same per block *row*, so one hot row no
+    longer crushes the resolution of the other ``bm - 1`` rows.  An
+    all-zero block (or row) gets ``scale = 1.0`` (payload is all zeros
+    anyway) — the scale is never zero, so dequantization can never produce
+    NaN/inf.
     """
     _check_quant_dtype(dtype)
+    base = quant_base_dtype(dtype)
     blocks = np.asarray(blocks, dtype=np.float32)
     if blocks.ndim != 3:
         raise ValueError(f"blocks must be (nblocks, bm, bk), got shape "
                          f"{blocks.shape}")
-    amax = np.abs(blocks).max(axis=(1, 2))
-    scales = np.where(amax > 0, amax / QUANT_MAX[dtype], 1.0).astype(np.float32)
-    scaled = blocks / scales[:, None, None]
-    if dtype == "int8":
+    if quant_is_rowwise(dtype):
+        amax = np.abs(blocks).max(axis=2)                 # (nblocks, bm)
+        scales = np.where(amax > 0, amax / QUANT_MAX[base],
+                          1.0).astype(np.float32)
+        scaled = blocks / scales[:, :, None]
+    else:
+        amax = np.abs(blocks).max(axis=(1, 2))            # (nblocks,)
+        scales = np.where(amax > 0, amax / QUANT_MAX[base],
+                          1.0).astype(np.float32)
+        scaled = blocks / scales[:, None, None]
+    if base == "int8":
         payload = np.clip(np.rint(scaled), -127.0, 127.0).astype(np.int8)
     else:
-        payload = scaled.astype(QUANT_DTYPES[dtype])  # RTNE cast (ml_dtypes)
+        payload = scaled.astype(QUANT_DTYPES[base])  # RTNE cast (ml_dtypes)
     return QuantizedBlocks(payload=payload, scales=scales, dtype=dtype)
 
 
 def dequantize_blocks(q: QuantizedBlocks) -> np.ndarray:
     """fp32 reconstruction of quantized blocks (round-trip helper)."""
-    return (np.asarray(q.payload, dtype=np.float32)
-            * np.asarray(q.scales, dtype=np.float32)[:, None, None])
+    payload = np.asarray(q.payload, dtype=np.float32)
+    scales = np.asarray(q.scales, dtype=np.float32)
+    if scales.ndim == 2:                                  # rowwise
+        return payload * scales[:, :, None]
+    return payload * scales[:, None, None]
 
 
 def quant_error_bound(dtype: str) -> float:
-    """Per-element round-trip bound as a fraction of the block's absmax.
+    """Per-element round-trip bound as a fraction of the scale group's absmax.
 
     int8: half an integer step of the 254-step range → ``amax / 254``.
     fp8-e4m3 (3 mantissa bits): relative error ≤ 2⁻⁴ of the element, which
     is ≤ ``amax / 16``; subnormal payloads only tighten the bound.
+    Rowwise modes obey the same fraction of the per-*row* absmax, which is
+    never larger than the block absmax — the bound only tightens.
     """
     _check_quant_dtype(dtype)
-    return {"int8": 1.0 / 254.0, "fp8": 1.0 / 16.0}[dtype]
+    return {"int8": 1.0 / 254.0, "fp8": 1.0 / 16.0}[quant_base_dtype(dtype)]
 
 
 def random_csr(rng: np.random.Generator, shape, density: float) -> CSR:

@@ -106,9 +106,12 @@ def flash_attention(q, k, v, *, causal: bool = True, window=None,
     tk = k.shape[1]
     bq = min(bq, tq)
     bkv = min(bkv, tk)
-    assert tq % bq == 0 and tk % bkv == 0
-    if q_period is not None:
-        assert q_period % bq == 0 and tq % q_period == 0, (tq, q_period, bq)
+    if tq % bq or tk % bkv:
+        raise ValueError(f"Tq={tq}/Tk={tk} must be multiples of the tile "
+                         f"sizes bq={bq}/bkv={bkv}")
+    if q_period is not None and (q_period % bq or tq % q_period):
+        raise ValueError(f"q_period={q_period} must be a multiple of bq={bq} "
+                         f"and divide Tq={tq}")
     n_q, n_kv = tq // bq, tk // bkv
     offset = (tk - (tq if q_period is None else q_period)) \
         if offset is None else offset

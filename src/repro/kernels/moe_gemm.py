@@ -51,11 +51,19 @@ def moe_gemm(x_sorted, w, chunk_expert, *, chunk_rows: int = 128,
     """
     t, d_in = x_sorted.shape
     n_chunks = chunk_expert.shape[0]
-    assert t == n_chunks * chunk_rows, (t, n_chunks, chunk_rows)
+    if t != n_chunks * chunk_rows:
+        raise ValueError(
+            f"x_sorted has {t} rows but chunk_expert describes "
+            f"{n_chunks} chunks of {chunk_rows} rows — pad the sorted "
+            f"tokens to whole chunks")
     e, d_in_w, d_out = w.shape
-    assert d_in_w == d_in
+    if d_in_w != d_in:
+        raise ValueError(f"expert weights contract over d_in={d_in_w} but "
+                         f"tokens have d_in={d_in}")
     bn = min(bn, d_out)
-    assert d_out % bn == 0
+    if d_out % bn:
+        raise ValueError(f"d_out={d_out} must be a multiple of the N tile "
+                         f"bn={bn}")
     n_tiles_n = d_out // bn
 
     grid_spec = pltpu.PrefetchScalarGridSpec(

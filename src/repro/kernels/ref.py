@@ -31,13 +31,17 @@ def bsr_to_dense(blocks, brow, bcol, grid_m, grid_k):
 
 
 def dequant_blocks_ref(blocks, scales):
-    """fp32 blocks from a quantized payload + per-block scales (no-op for
+    """fp32 blocks from a quantized payload + scales (no-op for
     ``scales=None``) — the oracle-side mirror of the kernels' in-kernel
-    dequantization."""
+    dequantization.  1-D scales are per block, 2-D are per block row
+    (rowwise mode)."""
     blocks = blocks.astype(jnp.float32)
     if scales is None:
         return blocks
-    return blocks * scales.astype(jnp.float32)[:, None, None]
+    scales = scales.astype(jnp.float32)
+    if scales.ndim == 2:
+        return blocks * scales[:, :, None]
+    return blocks * scales[:, None, None]
 
 
 def spmm_ref(blocks, brow, bcol, grid_m, grid_k, b_dense,

@@ -61,7 +61,9 @@ def rg_lru(x, a_gate, x_gate, a_param, h0, *, ct: int = 128, c: float = 8.0,
     """
     b, t, d = x.shape
     ct = min(ct, t)
-    assert t % ct == 0
+    if t % ct:
+        raise ValueError(f"sequence length T={t} must be a multiple of the "
+                         f"chunk length ct={ct}")
     n_chunks = t // ct
 
     kernel = functools.partial(_kernel, ct=ct, n_chunks=n_chunks, c=c)

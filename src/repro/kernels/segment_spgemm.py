@@ -47,17 +47,21 @@ from .segment_spmm import resolve_pipeline, validate_schedule_args
 
 
 def _make_legacy_kernel(lane_len: int, unroll: int, masked: bool,
-                        quant_a: bool, quant_b: bool):
+                        quant_a, quant_b):
     def _kernel(a_idx, b_idx, c_idx, seg_start, seg_write, accum_prev,
                 valid, *refs):
-        if quant_a:
+        if quant_a == "block":
             a_scales, refs = refs[0], refs[1:]
-        if quant_b:
+        if quant_b == "block":
             b_scales, refs = refs[0], refs[1:]
         a_refs = refs[:unroll]
         b_refs = refs[unroll:2 * unroll]
-        out = refs[2 * unroll]
-        acc = refs[2 * unroll + 1]
+        refs = refs[2 * unroll:]
+        if quant_a == "rowwise":
+            as_refs, refs = refs[:unroll], refs[unroll:]
+        if quant_b == "rowwise":
+            bs_refs, refs = refs[:unroll], refs[unroll:]
+        out, acc = refs
         base = pl.program_id(0) * lane_len + pl.program_id(1) * unroll
         for g in range(unroll):
             i = base + g
@@ -72,16 +76,24 @@ def _make_legacy_kernel(lane_len: int, unroll: int, masked: bool,
                 def _zero():
                     acc[...] = jnp.zeros_like(acc)
 
+            a_tile = a_refs[g][0].astype(jnp.float32)
+            b_tile = b_refs[g][0].astype(jnp.float32)
+            # Rowwise scales (A rows → output rows, B rows → the contraction
+            # axis) do not factor out of the dot, so those tiles dequantize
+            # *before* the MXU contraction.
+            if quant_a == "rowwise":
+                a_tile = a_tile * as_refs[g][0][:, None]
+            if quant_b == "rowwise":
+                b_tile = b_tile * bs_refs[g][0][:, None]
             contrib = jax.lax.dot_general(
-                a_refs[g][0].astype(jnp.float32),
-                b_refs[g][0].astype(jnp.float32),
+                a_tile, b_tile,
                 dimension_numbers=(((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)
             # per-block scales are scalar tile factors — applying them to
             # the fp32 product (after the dot, before accumulation) is exact
-            if quant_a:
+            if quant_a == "block":
                 contrib = contrib * a_scales[a_idx[i]]
-            if quant_b:
+            if quant_b == "block":
                 contrib = contrib * b_scales[b_idx[i]]
             if masked:
                 contrib = jnp.where(valid[i] == 1, contrib, 0.0)
@@ -95,13 +107,13 @@ def _make_legacy_kernel(lane_len: int, unroll: int, masked: bool,
 
 
 def _make_pipeline_kernel(lane_len: int, unroll: int, masked: bool,
-                          quant_a: bool, quant_b: bool):
+                          quant_a, quant_b):
     def _kernel(a_idx, b_idx, c_idx, seg_start, seg_write, accum_prev,
                 valid, a_fetch, b_fetch, a_slot, b_slot, *refs):
         a_hbm, b_hbm, refs = refs[0], refs[1], refs[2:]
-        if quant_a:
+        if quant_a is not None:
             a_scale_ref, refs = refs[0], refs[1:]
-        if quant_b:
+        if quant_b is not None:
             b_scale_ref, refs = refs[0], refs[1:]
         out, acc, a_buf, b_buf, a_sem, b_sem = refs
         # grid coordinates are read once here: pl.program_id must not be
@@ -161,17 +173,26 @@ def _make_pipeline_kernel(lane_len: int, unroll: int, masked: bool,
             def _wait_b(i=i):
                 b_copy(i, b_slot[i]).wait()
 
+            a_tile = a_buf[a_slot[i]].astype(jnp.float32)
+            b_tile = b_buf[b_slot[i]].astype(jnp.float32)
+            # Rowwise scales (A rows → output rows, B rows → the contraction
+            # axis) do not factor out of the dot, so those tiles dequantize
+            # *before* the MXU contraction; the step's scale rows arrive as
+            # one (unroll, rows) VMEM window each.
+            if quant_a == "rowwise":
+                a_tile = a_tile * a_scale_ref[0, g][:, None]
+            if quant_b == "rowwise":
+                b_tile = b_tile * b_scale_ref[0, g][:, None]
             contrib = jax.lax.dot_general(
-                a_buf[a_slot[i]].astype(jnp.float32),
-                b_buf[b_slot[i]].astype(jnp.float32),
+                a_tile, b_tile,
                 dimension_numbers=(((1,), (0,)), ((), ())),
                 preferred_element_type=jnp.float32)
             # per-block scales are scalar tile factors — applying them to
             # the fp32 product (after the dot, before accumulation) is
             # exact; the step's scales arrive as one VMEM vector each
-            if quant_a:
+            if quant_a == "block":
                 contrib = contrib * a_scale_ref[0, g]
-            if quant_b:
+            if quant_b == "block":
                 contrib = contrib * b_scale_ref[0, g]
             if masked:
                 contrib = jnp.where(valid[i] == 1, contrib, 0.0)
@@ -205,9 +226,12 @@ def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
       seg_start/seg_write/accum_prev/valid: (n_items,) int32 schedule flags.
       n_c_blocks: number of symbolic C blocks.
       n_lanes/unroll: lane-parallel grid shape (see module docstring).
-      a_scales/b_scales: per-block fp32 dequantization scales
-        (``(na,)`` / ``(nb,)``), gathered per item and streamed as per-step
-        VMEM vectors (pipelined) or read from SMEM (legacy).
+      a_scales/b_scales: fp32 dequantization scales — per-block
+        (``(na,)`` / ``(nb,)``, applied to the fp32 product) or per block
+        row (``(na, bm)`` / ``(nb, bk)``, rowwise mode: tiles dequantize
+        before the dot since B-row scales ride the contraction axis).
+        Gathered per item and streamed as per-step VMEM windows
+        (pipelined) or read per item (legacy).
       a_fetch/b_fetch: (n_items,) int32 DMA fetch flags — 1 where the item
         must copy its A/B tile from HBM, 0 where the resident ring slot is
         reused (see ``repro.core.schedule.fetch_flags``).
@@ -233,14 +257,18 @@ def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
             f"symbolic C block, so the output needs at least one "
             f"(all-masked patterns short-circuit before the kernel — see "
             f"repro.api.executor)")
-    if a_scales is not None and a_scales.shape != (a_blocks.shape[0],):
+    if a_scales is not None and a_scales.shape not in (
+            (a_blocks.shape[0],), (a_blocks.shape[0], bm)):
         raise ValueError(
             f"a_scales has shape {a_scales.shape}, expected one fp32 scale "
-            f"per stored block ({a_blocks.shape[0]},)")
-    if b_scales is not None and b_scales.shape != (b_blocks.shape[0],):
+            f"per stored block ({a_blocks.shape[0]},) or per block row "
+            f"({a_blocks.shape[0]}, {bm})")
+    if b_scales is not None and b_scales.shape not in (
+            (b_blocks.shape[0],), (b_blocks.shape[0], bk)):
         raise ValueError(
             f"b_scales has shape {b_scales.shape}, expected one fp32 scale "
-            f"per stored block ({b_blocks.shape[0]},)")
+            f"per stored block ({b_blocks.shape[0]},) or per block row "
+            f"({b_blocks.shape[0]}, {bk})")
     pipeline = resolve_pipeline(pipeline, (a_fetch, b_fetch, a_slot, b_slot))
     validate_schedule_args(
         n_items, n_lanes, unroll,
@@ -249,8 +277,10 @@ def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
          "a_fetch": a_fetch, "b_fetch": b_fetch, "a_slot": a_slot,
          "b_slot": b_slot})
     lane_len = n_items // n_lanes
-    quant_a = a_scales is not None
-    quant_b = b_scales is not None
+    quant_a = None if a_scales is None else (
+        "rowwise" if a_scales.ndim == 2 else "block")
+    quant_b = None if b_scales is None else (
+        "rowwise" if b_scales.ndim == 2 else "block")
     out_shape = jax.ShapeDtypeStruct((n_c_blocks, bm, bn), out_dtype)
 
     if not pipeline:
@@ -268,12 +298,25 @@ def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
     operands = [a_blocks, b_blocks]
     scale_spec = pl.BlockSpec(
         (1, unroll), lambda l, s, *rest: (l * n_steps + s, 0))
-    if quant_a:
+
+    def row_spec(rows):
+        return pl.BlockSpec(
+            (1, unroll, rows), lambda l, s, *rest: (l * n_steps + s, 0, 0))
+
+    if quant_a == "block":
         in_specs.append(scale_spec)
         operands.append(jnp.take(a_scales, a_idx).reshape(-1, unroll))
-    if quant_b:
+    elif quant_a == "rowwise":
+        in_specs.append(row_spec(bm))
+        operands.append(
+            jnp.take(a_scales, a_idx, axis=0).reshape(-1, unroll, bm))
+    if quant_b == "block":
         in_specs.append(scale_spec)
         operands.append(jnp.take(b_scales, b_idx).reshape(-1, unroll))
+    elif quant_b == "rowwise":
+        in_specs.append(row_spec(bk))
+        operands.append(
+            jnp.take(b_scales, b_idx, axis=0).reshape(-1, unroll, bk))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=len(prefetch),
         grid=(n_lanes, n_steps),
@@ -312,14 +355,26 @@ def _legacy_spgemm_call(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
         return lambda l, s, ai, bi, *rest: (
             ref_pick(ai, bi)[l * lane_len + s * unroll + g], 0, 0)
 
+    def sel2(ref_pick, g):
+        return lambda l, s, ai, bi, *rest: (
+            ref_pick(ai, bi)[l * lane_len + s * unroll + g], 0)
+
+    in_specs = (
+        [pl.BlockSpec((1, bm, bk), sel(lambda ai, bi: ai, g))
+         for g in range(unroll)]
+        + [pl.BlockSpec((1, bk, bn), sel(lambda ai, bi: bi, g))
+           for g in range(unroll)])
+    if quant_a == "rowwise":
+        in_specs += [pl.BlockSpec((1, bm), sel2(lambda ai, bi: ai, g))
+                     for g in range(unroll)]
+    if quant_b == "rowwise":
+        in_specs += [pl.BlockSpec((1, bk), sel2(lambda ai, bi: bi, g))
+                     for g in range(unroll)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=7 + int(quant_a) + int(quant_b),
+        num_scalar_prefetch=(7 + int(quant_a == "block")
+                             + int(quant_b == "block")),
         grid=(n_lanes, lane_len // unroll),
-        in_specs=(
-            [pl.BlockSpec((1, bm, bk), sel(lambda ai, bi: ai, g))
-             for g in range(unroll)]
-            + [pl.BlockSpec((1, bk, bn), sel(lambda ai, bi: bi, g))
-               for g in range(unroll)]),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (1, bm, bn),
             lambda l, s, ai, bi, ci, *rest: (
@@ -328,9 +383,13 @@ def _legacy_spgemm_call(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
     )
     kernel = _make_legacy_kernel(lane_len, unroll, masked, quant_a, quant_b)
     prefetch = ((a_idx, b_idx, c_idx, seg_start, seg_write, accum_prev, valid)
-                + ((a_scales,) if quant_a else ())
-                + ((b_scales,) if quant_b else ()))
+                + ((a_scales,) if quant_a == "block" else ())
+                + ((b_scales,) if quant_b == "block" else ()))
     operands = [a_blocks] * unroll + [b_blocks] * unroll
+    if quant_a == "rowwise":
+        operands += [a_scales] * unroll
+    if quant_b == "rowwise":
+        operands += [b_scales] * unroll
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

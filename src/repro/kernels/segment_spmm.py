@@ -67,18 +67,23 @@ from .compat import CompilerParams
 
 
 def _make_legacy_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
-                        masked: bool, quantized: bool):
+                        masked: bool, quant: str | None):
     contract = (((0,), (0,)), ((), ())) if transpose_lhs \
         else (((1,), (0,)), ((), ()))
 
     def _kernel(slot_idx, m_idx, k_idx, seg_start, seg_write, accum_prev,
                 valid, *refs):
-        if quantized:
+        if quant == "block":
             a_scales, refs = refs[0], refs[1:]
         a_refs = refs[:unroll]
         b_refs = refs[unroll:2 * unroll]
-        out = refs[2 * unroll]
-        acc = refs[2 * unroll + 1]
+        if quant == "rowwise":
+            s_refs = refs[2 * unroll:3 * unroll]
+            out = refs[3 * unroll]
+            acc = refs[3 * unroll + 1]
+        else:
+            out = refs[2 * unroll]
+            acc = refs[2 * unroll + 1]
         base = pl.program_id(0) * lane_len + pl.program_id(2) * unroll
         for g in range(unroll):
             i = base + g
@@ -93,12 +98,18 @@ def _make_legacy_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
                 def _zero():
                     acc[...] = jnp.zeros_like(acc)
 
+            a_tile = a_refs[g][0].astype(jnp.float32)
+            if quant == "rowwise":
+                # Per-row scales do NOT commute with a contraction over the
+                # tile's row axis (transpose_lhs), so the tile is dequantized
+                # *before* the dot — exact in both orientations.
+                a_tile = a_tile * s_refs[g][0][:, None]
             contrib = jax.lax.dot_general(
-                a_refs[g][0].astype(jnp.float32),
+                a_tile,
                 b_refs[g][...].astype(jnp.float32),
                 dimension_numbers=contract,
                 preferred_element_type=jnp.float32)
-            if quantized:
+            if quant == "block":
                 # Per-block scale is a scalar factor of the whole tile, so
                 # applying it to the fp32 product (after the MXU dot) is
                 # algebraically exact: (s·Aq) @ B == s · (Aq @ B).
@@ -115,7 +126,7 @@ def _make_legacy_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
 
 
 def _make_pipeline_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
-                          masked: bool, quantized: bool, contract_blk: int,
+                          masked: bool, quant: str | None, contract_blk: int,
                           bn: int):
     contract = (((0,), (0,)), ((), ())) if transpose_lhs \
         else (((1,), (0,)), ((), ()))
@@ -123,7 +134,7 @@ def _make_pipeline_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
     def _kernel(slot_idx, m_idx, k_idx, seg_start, seg_write, accum_prev,
                 valid, a_fetch, b_fetch, a_slot, b_slot, *refs):
         a_hbm, b_hbm, refs = refs[0], refs[1], refs[2:]
-        if quantized:
+        if quant is not None:
             scale_ref, refs = refs[0], refs[1:]
         out, acc, a_buf, b_buf, a_sem, b_sem = refs
         # grid coordinates are read once here: pl.program_id must not be
@@ -197,12 +208,20 @@ def _make_pipeline_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
             def _wait_b(i=i):
                 b_copy(i, b_slot[i]).wait()
 
+            a_tile = a_buf[a_slot[i]].astype(jnp.float32)
+            if quant == "rowwise":
+                # Per-row scales do NOT commute with a contraction over the
+                # tile's row axis (transpose_lhs), so the tile is dequantized
+                # *before* the dot — exact in both orientations.  The step's
+                # (unroll, bm) scale rows arrive as one VMEM window (gathered
+                # through slot_idx at call time).
+                a_tile = a_tile * scale_ref[0, g][:, None]
             contrib = jax.lax.dot_general(
-                a_buf[a_slot[i]].astype(jnp.float32),
+                a_tile,
                 b_buf[b_slot[i]].astype(jnp.float32),
                 dimension_numbers=contract,
                 preferred_element_type=jnp.float32)
-            if quantized:
+            if quant == "block":
                 # Per-block scale is a scalar factor of the whole tile, so
                 # applying it to the fp32 product (after the MXU dot) is
                 # algebraically exact: (s·Aq) @ B == s · (Aq @ B).  The
@@ -293,9 +312,12 @@ def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
       transpose_lhs: contract along each A tile's row axis (``Aᵀ @ B``) —
         the backward pass reads forward storage directly.
       masked: skip the validity mask when the schedule has no pads.
-      a_scales: (n_blocks,) fp32 per-block dequantization scales, or None
-        for fp32 blocks.  Gathered per item and streamed as a per-step VMEM
-        vector (pipelined) or read from SMEM via ``slot_idx`` (legacy).
+      a_scales: fp32 dequantization scales, or None for fp32 blocks.
+        ``(n_blocks,)`` applies one scale per block to the fp32 product;
+        ``(n_blocks, bm)`` (rowwise mode) dequantizes each A tile row
+        *before* the dot, which stays exact under ``transpose_lhs``.
+        Gathered per item and streamed as a per-step VMEM window
+        (pipelined) or read via ``slot_idx`` (legacy).
       a_fetch/b_fetch: (n_items,) int32 DMA fetch flags — 1 where the item
         must copy its A tile / B row-tile from HBM, 0 where the resident
         ring slot is reused (see ``repro.core.schedule.fetch_flags``).
@@ -307,10 +329,12 @@ def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
       (grid_m * row_block, N) dense output.
     """
     _, bm, bk = a_blocks.shape
-    if a_scales is not None and a_scales.shape != (a_blocks.shape[0],):
+    if a_scales is not None and a_scales.shape not in (
+            (a_blocks.shape[0],), (a_blocks.shape[0], bm)):
         raise ValueError(
             f"a_scales has shape {a_scales.shape}, expected one fp32 scale "
-            f"per stored block ({a_blocks.shape[0]},)")
+            f"per stored block ({a_blocks.shape[0]},) or per block row "
+            f"({a_blocks.shape[0]}, {bm})")
     row_blk, contract_blk = (bk, bm) if transpose_lhs else (bm, bk)
     k_dim, n_dim = b_dense.shape
     if k_dim % contract_blk != 0:
@@ -333,7 +357,8 @@ def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
     n_items = seg_start.shape[0]
     lane_len = n_items // n_lanes
     n_tiles_n = n_dim // bn
-    quantized = a_scales is not None
+    quant = None if a_scales is None else (
+        "rowwise" if a_scales.ndim == 2 else "block")
     out_shape = jax.ShapeDtypeStruct((grid_m * row_blk, n_dim), out_dtype)
 
     if not pipeline:
@@ -341,7 +366,7 @@ def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
             a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
             accum_prev, valid, b_dense, a_scales, out_shape, lane_len,
             n_lanes, n_tiles_n, bm, bk, row_blk, contract_blk, bn, unroll,
-            transpose_lhs, masked, quantized, interpret)
+            transpose_lhs, masked, quant, interpret)
 
     depth = 2 * unroll
     n_steps = lane_len // unroll
@@ -350,12 +375,19 @@ def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
     in_specs = [pl.BlockSpec(memory_space=pltpu.ANY),
                 pl.BlockSpec(memory_space=pltpu.ANY)]
     operands = [a_blocks, b_dense]
-    if quantized:
+    if quant == "block":
         # one fp32 scale per item, laid out per grid step — the kernel reads
         # its step's scales as a single VMEM vector
         scale_items = jnp.take(a_scales, slot_idx).reshape(-1, unroll)
         in_specs.append(pl.BlockSpec(
             (1, unroll), lambda l, j, s, *rest: (l * n_steps + s, 0)))
+        operands.append(scale_items)
+    elif quant == "rowwise":
+        # one (bm,) scale row per item — the step's window is (unroll, bm)
+        scale_items = jnp.take(a_scales, slot_idx,
+                               axis=0).reshape(-1, unroll, bm)
+        in_specs.append(pl.BlockSpec(
+            (1, unroll, bm), lambda l, j, s, *rest: (l * n_steps + s, 0, 0)))
         operands.append(scale_items)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=len(prefetch),
@@ -374,7 +406,7 @@ def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
         ],
     )
     kernel = _make_pipeline_kernel(lane_len, unroll, transpose_lhs, masked,
-                                   quantized, contract_blk, bn)
+                                   quant, contract_blk, bn)
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
@@ -389,11 +421,12 @@ def _legacy_spmm_call(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
                       accum_prev, valid, b_dense, a_scales, out_shape,
                       lane_len, n_lanes, n_tiles_n, bm, bk, row_blk,
                       contract_blk, bn, unroll, transpose_lhs, masked,
-                      quantized, interpret):
+                      quant, interpret):
     """BlockSpec auto-pipeline baseline (operand re-fetch decided by the
     index-map revisiting rule; per-block scales on the scalar-prefetch
-    path).  Kept for benchmarking the explicit DMA pipeline against and for
-    schedules built without fetch flags."""
+    path, rowwise scale rows on per-item VMEM windows).  Kept for
+    benchmarking the explicit DMA pipeline against and for schedules built
+    without fetch flags."""
     # index maps absorb the variable scalar-prefetch tail (*rest) so the
     # optional a_scales operand doesn't change their arity
     def a_map(g):
@@ -404,13 +437,20 @@ def _legacy_spmm_call(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
         return lambda l, j, s, slot, m, k, *rest: (
             k[l * lane_len + s * unroll + g], j)
 
+    def s_map(g):
+        return lambda l, j, s, slot, *rest: (
+            slot[l * lane_len + s * unroll + g], 0)
+
+    in_specs = (
+        [pl.BlockSpec((1, bm, bk), a_map(g)) for g in range(unroll)]
+        + [pl.BlockSpec((contract_blk, bn), b_map(g))
+           for g in range(unroll)])
+    if quant == "rowwise":
+        in_specs += [pl.BlockSpec((1, bm), s_map(g)) for g in range(unroll)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=8 if quantized else 7,
+        num_scalar_prefetch=8 if quant == "block" else 7,
         grid=(n_lanes, n_tiles_n, lane_len // unroll),
-        in_specs=(
-            [pl.BlockSpec((1, bm, bk), a_map(g)) for g in range(unroll)]
-            + [pl.BlockSpec((contract_blk, bn), b_map(g))
-               for g in range(unroll)]),
+        in_specs=in_specs,
         out_specs=pl.BlockSpec(
             (row_blk, bn),
             lambda l, j, s, slot, m, *rest: (
@@ -418,10 +458,12 @@ def _legacy_spmm_call(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
         scratch_shapes=[pltpu.VMEM((row_blk, bn), jnp.float32)],
     )
     kernel = _make_legacy_kernel(lane_len, unroll, transpose_lhs, masked,
-                                 quantized)
+                                 quant)
     prefetch = (slot_idx, m_idx, k_idx, seg_start, seg_write, accum_prev,
-                valid) + ((a_scales,) if quantized else ())
+                valid) + ((a_scales,) if quant == "block" else ())
     operands = [a_blocks] * unroll + [b_dense] * unroll
+    if quant == "rowwise":
+        operands += [a_scales] * unroll
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,

@@ -363,7 +363,14 @@ def attention_apply(p, x, *, n_heads, n_kv, head_dim, positions,
         cks = kv_cache_write(cache["k_s"], ks_new, cache_pos)
         cvs = kv_cache_write(cache["v_s"], vs_new, cache_pos)
         new_cache = {"k": ck, "v": cv, "k_s": cks, "v_s": cvs}
-        assert t <= 8, "int8 KV cache path supports decode-sized queries"
+        if t > 8:
+            # a guard, not an assert: serving stacks routinely run under
+            # ``python -O``, which strips asserts — and a silently oversized
+            # query here would attend with garbage positions, not crash
+            raise ValueError(
+                f"int8 KV cache path supports decode-sized queries (t <= 8), "
+                f"got t={t}; chunk the prefill (Engine does this via "
+                f"prefill_buckets) or use the fp32 cache for long queries")
         out = _direct_attention_q8(q, ck, cks, cv, cvs,
                                    q_offset=cache_pos, kv_len=cache_pos + t,
                                    causal=causal, window=window)

@@ -70,10 +70,12 @@ class SparseLinear:
         same BSR storage order), the kernels dequantize at the fp32
         accumulator, and gradients to the weights stop (x-gradients still
         flow, so the layer composes under ``jax.grad`` of downstream
-        losses).  The source plan's lane/unroll/backend configuration is
-        carried over (``fold_len`` is not recoverable from a plan — build
-        the fp32 layer without it or re-plan manually if you need both).
-        Returns ``(layer, params)`` like :meth:`create`.
+        losses).  The source plan's full planner configuration — lanes,
+        unroll, backend, ``pipeline`` and the tuned ``bn_hint`` — is
+        carried over.  ``fold_len`` is the one knob a plan does not record;
+        a fold-built plan (any ``accum_prev`` item set) raises rather than
+        silently re-planning without the fold.  Returns ``(layer, params)``
+        like :meth:`create`.
         """
         blocks = np.asarray(params["blocks"])
         if (self.plan.quantized or "scales" in params
@@ -82,6 +84,14 @@ class SparseLinear:
                 "layer is already quantized — re-quantizing would treat the "
                 f"{blocks.dtype} payload as fp32 weights and silently drop "
                 "the per-block scales; quantize from the fp32 layer+params")
+        if self.plan.accum_prev is not None and np.any(
+                np.asarray(self.plan.accum_prev)):
+            raise ValueError(
+                "cannot quantize a layer built from a fold_len plan: the "
+                "fold length is not recorded on the plan, so re-planning "
+                "would silently drop the fold schedule — build the fp32 "
+                "layer without fold_len, or re-plan manually with "
+                "plan_matmul(..., fold_len=..., quantize=...)")
         w = BSR(shape=(self.d_out, self.d_in),
                 block_shape=self.plan.block_shape,
                 brow=np.asarray(self.plan.a_brow),
@@ -89,7 +99,9 @@ class SparseLinear:
                 blocks=blocks.astype(np.float32))
         plan = plan_matmul(w, policy=self.plan.policy, with_grad=True,
                            quantize=dtype, n_lanes=self.plan.n_lanes,
-                           unroll=self.plan.unroll, backend=self.plan.backend)
+                           unroll=self.plan.unroll, backend=self.plan.backend,
+                           pipeline=self.plan.pipeline,
+                           bn_hint=self.plan.bn_hint)
         layer = SparseLinear(plan=plan, d_out=self.d_out, d_in=self.d_in)
         return layer, {"blocks": plan.lhs_blocks, "scales": plan.lhs_scales}
 

@@ -15,6 +15,7 @@ dry-run even at 64 layers.
 """
 from __future__ import annotations
 
+import copy
 import functools
 from typing import Any, Dict, Optional, Tuple
 
@@ -23,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core.formats import QUANT_DTYPES, quantize_blocks
 from repro.sharding import act_constrain
 from . import layers, moe, recurrent
 from .sparse_ffn import SparseMLP
@@ -43,6 +45,41 @@ def _sparse_mlp_params(key, sm: SparseMLP, dtype):
     k1, k2, k3 = jax.random.split(key, 3)
     return {"up": pb(k1, sm.up), "gate": pb(k2, sm.gate),
             "down": pb(k3, sm.down)}
+
+
+def _is_sparse_mlp_params(p) -> bool:
+    """True for a block dict whose ``mlp`` subtree holds SparseMLP leaves
+    (``up``/``gate``/``down`` each carrying ``blocks``) rather than dense
+    SwiGLU weights."""
+    mlp = p.get("mlp") if isinstance(p, dict) else None
+    return (isinstance(mlp, dict)
+            and all(isinstance(mlp.get(k), dict) and "blocks" in mlp[k]
+                    for k in ("up", "gate", "down")))
+
+
+def _quantize_mlp_params(mlp, dtype: str):
+    """Quantize one (layer-stacked) SparseMLP param subtree: each
+    projection's fp32 ``blocks`` leaf — any leading stack axes, then
+    ``(n_blocks, bm, bk)`` — becomes a payload + per-block (or per-block-row
+    for ``*.rowwise`` modes) fp32 ``scales`` leaf with the same stacking."""
+    out = {}
+    for proj in ("up", "gate", "down"):
+        leaf = mlp[proj]
+        blocks = np.asarray(leaf["blocks"])
+        if ("scales" in leaf
+                or np.dtype(blocks.dtype) in QUANT_DTYPES.values()):
+            raise ValueError(
+                f"params['...']['mlp']['{proj}'] is already quantized "
+                f"({blocks.dtype}) — quantize from the fp32 model+params")
+        *stack, n, bm, bk = blocks.shape
+        q = quantize_blocks(blocks.reshape(-1, bm, bk).astype(np.float32),
+                            dtype)
+        out[proj] = {
+            "blocks": jnp.asarray(q.payload.reshape(blocks.shape)),
+            "scales": jnp.asarray(q.scales.reshape(
+                tuple(stack) + (n,) + q.scales.shape[1:])),
+        }
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -234,6 +271,48 @@ class Transformer:
             lkeys = jax.random.split(gkey, n)
             params[name] = jax.vmap(one)(lkeys)
         return params
+
+    # -- quantized serving ----------------------------------------------------
+    def quantize(self, params, dtype: str = "int8"):
+        """Freeze a trained block-sparse-FFN model for quantized serving.
+
+        Returns ``(model, params)``: a copy of this model whose shared
+        :class:`SparseMLP` plans store ``dtype`` payloads (``"int8"``,
+        ``"fp8"``, or the per-block-row ``"int8.rowwise"``/
+        ``"fp8.rowwise"`` modes), and the matching param tree with every
+        layer's fp32 FFN ``blocks`` leaves replaced by quantized payload +
+        fp32 ``scales`` leaves in the same layer stacking.  Attention,
+        norm, and embedding params pass through unchanged.  The Segment
+        kernels dequantize at the fp32 accumulator, so decode runs on the
+        low-precision weight fetch the traffic model prices (~4× fewer A
+        bytes) without a dequantized weight copy ever materializing.
+        """
+        if self.sparse_mlp is None:
+            raise ValueError(
+                "Transformer.quantize requires a block-sparse FFN model "
+                "(ModelConfig.ffn_block_sparse=True); dense SwiGLU weights "
+                "have no Segment plan to quantize")
+        model = copy.copy(self)
+        model.sparse_mlp, model._sparse_proto = self.sparse_mlp.quantize(
+            self._sparse_proto, dtype)
+
+        new_params = dict(params)
+        for (name, kinds, _) in self.groups:
+            g = params[name]
+            if isinstance(kinds, tuple):
+                new_g = {}
+                for j in range(len(kinds)):
+                    sub = g[f"b{j}"]
+                    if _is_sparse_mlp_params(sub):
+                        sub = dict(sub)
+                        sub["mlp"] = _quantize_mlp_params(sub["mlp"], dtype)
+                    new_g[f"b{j}"] = sub
+                new_params[name] = new_g
+            elif _is_sparse_mlp_params(g):
+                new_g = dict(g)
+                new_g["mlp"] = _quantize_mlp_params(g["mlp"], dtype)
+                new_params[name] = new_g
+        return model, new_params
 
     # -- scanned stacks -------------------------------------------------------
     def _run_group(self, params_g, x, kinds, *, positions, enc_out=None,

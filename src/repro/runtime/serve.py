@@ -95,11 +95,19 @@ class Engine:
 
     def __init__(self, model, params, *, slots: int = 4, max_len: int = 512,
                  backend: Optional[str] = None,
-                 prefill_buckets: Tuple[int, ...] = (64, 16)):
+                 prefill_buckets: Tuple[int, ...] = (64, 16),
+                 quantize: Optional[str] = None):
         if getattr(model.cfg, "family", None) == "enc_dec":
             raise NotImplementedError(
                 "enc_dec serving needs encoder output plumbing; the engine "
                 "currently serves decoder-only families")
+        if quantize is not None:
+            # freeze the block-sparse FFN weights for low-precision decode:
+            # the engine's jitted step functions then trace over quantized
+            # plans (int8/fp8 payload + fp32-scale leaves) and every weight
+            # fetch in the Segment kernels moves ~4x fewer bytes
+            model, params = model.quantize(params, quantize)
+        self.quantize = quantize
         self.model = model
         self.params = params
         self.slots = int(slots)

@@ -51,6 +51,11 @@ from .cost import DEFAULT_INTERPRET, DEFAULT_TPU, CostModel
 _VMEM_DTYPE = {"fp32": "float32", "int8": "int8", "fp8": "float8_e4m3fn"}
 
 
+def _vmem_dtype(block_dtype: str) -> str:
+    from repro.core.formats import quant_base_dtype
+    return _VMEM_DTYPE[quant_base_dtype(block_dtype)]
+
+
 @dataclasses.dataclass(frozen=True)
 class Candidate:
     """One point of the knob grid: a (dataflow, schedule-shape) choice."""
@@ -203,8 +208,9 @@ def _score_spmm(a: BSR, hint: int, block_dtype: str, model: CostModel,
                             n_tiles = (max(1, hint) + pad) // bn_eff
                             vbytes = spmm_vmem_bytes(
                                 bm=bm, bk=bk, bn=bn_eff, unroll=un,
-                                block_dtype=_VMEM_DTYPE[block_dtype],
+                                block_dtype=_vmem_dtype(block_dtype),
                                 quantized=block_dtype != "fp32",
+                                rowwise=block_dtype.endswith(".rowwise"),
                                 pipelined=pipe)
                             if vbytes > limit:
                                 rejected += 1
@@ -254,9 +260,10 @@ def _score_spgemm(a: BSR, b: BSR, block_dtype: str, model: CostModel,
                             block_dtype, bm, bk, bn)
                         vbytes = spgemm_vmem_bytes(
                             bm=bm, bk=bk, bn=bn, unroll=un,
-                            block_dtype=_VMEM_DTYPE[block_dtype],
+                            block_dtype=_vmem_dtype(block_dtype),
                             quant_a=block_dtype != "fp32",
                             quant_b=block_dtype != "fp32",
+                            rowwise=block_dtype.endswith(".rowwise"),
                             pipelined=pipe)
                         if vbytes > limit:
                             rejected += 1

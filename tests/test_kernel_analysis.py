@@ -316,6 +316,41 @@ def test_quantized_spmm_budget_matches_traced_kernel(small_plans):
     assert traced == analytic == plan_vmem_bytes(quant, bn=64)
 
 
+@pytest.mark.parametrize("pipelined", [True, False])
+def test_rowwise_spmm_budget_matches_traced_kernel(pipelined):
+    """Rowwise scales are VMEM-resident on both executor paths (windowed
+    operand pipelined, per-item windows legacy) — the closed form must
+    track the traced kernels byte-for-byte like the per-block pin above."""
+    a = BSR.random(np.random.default_rng(3), (128, 128), (32, 32), 0.5)
+    plan = plan_matmul(a, policy="segment", n_lanes=2, unroll=2,
+                       quantize="int8.rowwise", pipeline=pipelined,
+                       cache=False)
+    x = jnp.zeros((128, 64), jnp.float32)
+    traced = _traced_total(
+        lambda xx: execute_plan(plan, xx, bn=64, backend="interpret"),
+        x, label=f"budget-rowwise-{pipelined}")
+    analytic = spmm_vmem_bytes(bm=32, bk=32, bn=64, unroll=2,
+                               block_dtype="int8", quantized=True,
+                               rowwise=True, pipelined=pipelined)
+    assert traced == analytic == plan_vmem_bytes(plan, bn=64)
+
+
+def test_rowwise_spgemm_budget_matches_traced_kernel():
+    a = BSR.random(np.random.default_rng(4), (128, 128), (32, 32), 0.5)
+    b = BSR.random(np.random.default_rng(5), (128, 128), (32, 32), 0.5)
+    plan = plan_matmul(a, b, policy="segment", n_lanes=2, unroll=2,
+                       quantize="fp8.rowwise", cache=False)
+    traced = _traced_total(
+        lambda: execute_plan(plan, backend="interpret"),
+        label="budget-rowwise-spgemm")
+    analytic = spgemm_vmem_bytes(bm=32, bk=32, bn=32, unroll=2,
+                                 block_dtype="float8_e4m3fn",
+                                 rhs_dtype="float8_e4m3fn",
+                                 quant_a=True, quant_b=True, rowwise=True,
+                                 pipelined=True)
+    assert traced == analytic == plan_vmem_bytes(plan)
+
+
 def test_spgemm_budget_matches_traced_kernel(small_plans):
     _, _, spgemm = small_plans
     traced = _traced_total(

@@ -317,3 +317,228 @@ def test_quant_property_roundtrip_and_parity(seed, gm, gk, density, dtype):
     want = a.to_dense() @ x
     norm = max(float(np.abs(want).max()), 1e-3)
     assert np.abs(got - want).max() / norm < REL_TOL[dtype]
+
+
+# ---------------------------------------------------------------------------
+# sub-block (per-row-of-block) scales: "*.rowwise" modes
+# ---------------------------------------------------------------------------
+
+
+def _outlier_bsr(seed=21, shape=(128, 160), block=(32, 32), density=0.35):
+    """BSR whose blocks each carry one large-magnitude row — the case
+    per-block scales handle worst and per-row scales are built for."""
+    a = BSR.random(np.random.default_rng(seed), shape, block, density)
+    a.blocks[:, 3, :] *= 50.0
+    return a
+
+
+@pytest.mark.parametrize("mode", ["int8.rowwise", "fp8.rowwise"])
+def test_rowwise_roundtrip_error_bound(mode):
+    base = mode.split(".", 1)[0]
+    blocks = RNG.standard_normal((9, 16, 16)).astype(np.float32)
+    blocks[3] = 0.0
+    blocks[5, 7] *= 100.0                # one outlier row
+    q = quantize_blocks(blocks, mode)
+    assert q.dtype == mode
+    assert q.payload.dtype == QUANT_DTYPES[base]
+    assert q.scales.shape == (9, 16)     # one fp32 scale per block row
+    assert (q.scales > 0).all()
+    deq = dequantize_blocks(q)
+    assert np.isfinite(deq).all()
+    # the bound is the *per-row* absmax fraction — strictly tighter than
+    # the per-block bound wherever rows differ in magnitude
+    amax_row = np.abs(blocks).max(axis=2)
+    bound = amax_row * quant_error_bound(mode) + 1e-7
+    assert (np.abs(blocks - deq) <= bound[:, :, None]).all()
+    np.testing.assert_array_equal(deq[3], 0.0)
+
+
+@pytest.mark.parametrize("base", ["int8", "fp8"])
+def test_rowwise_tightens_outlier_rows(base):
+    """On blocks with a magnitude-outlier row, per-row scales beat
+    per-block scales: the non-outlier rows keep their own resolution."""
+    a = _outlier_bsr()
+    err = {m: np.linalg.norm(a.blocks - dequantize_blocks(
+        quantize_blocks(a.blocks, m)))
+        for m in (base, base + ".rowwise")}
+    assert err[base + ".rowwise"] < err[base]
+
+
+@pytest.mark.parametrize("mode", ["int8.rowwise", "fp8.rowwise"])
+@pytest.mark.parametrize("pipeline", [True, False])
+def test_rowwise_spmm_three_way_parity(mode, pipeline):
+    a = _outlier_bsr()
+    x = jnp.asarray(RNG.standard_normal((a.shape[1], 48)).astype(np.float32))
+    plan = api.plan_matmul(a, x.shape, quantize=mode, n_lanes=2,
+                           pipeline=pipeline, verify="full")
+    assert plan.quantized and plan.block_dtype == mode
+    assert plan.lhs_scales.shape == (a.nblocks, a.block_shape[0])
+    got_i = np.asarray(plan(x, bn=16, backend="interpret"))
+    got_r = np.asarray(plan(x, backend="reference"))
+    np.testing.assert_allclose(got_i, got_r, rtol=1e-4, atol=1e-4)
+    want_q = _dequant_dense(a, mode) @ np.asarray(x)
+    np.testing.assert_allclose(got_i, want_q, rtol=1e-3, atol=1e-3)
+    want = a.to_dense() @ np.asarray(x)
+    rel = np.abs(got_i - want).max() / np.abs(want).max()
+    assert rel < REL_TOL[mode.split(".", 1)[0]], (mode, rel)
+
+
+@pytest.mark.parametrize("mode", ["int8.rowwise", "fp8.rowwise"])
+def test_rowwise_spgemm_parity(mode):
+    a = _outlier_bsr(22, (128, 160), (32, 32), 0.3)
+    b = _outlier_bsr(23, (160, 96), (32, 32), 0.3)
+    plan = api.plan_matmul(a, b, quantize=mode, n_lanes=2, verify="full")
+    # B-side rowwise scales run over the contraction rows (bk)
+    assert plan.rhs_scales.shape == (b.nblocks, 32)
+    got_i = np.asarray(plan(backend="interpret"))
+    got_r = np.asarray(plan(backend="reference"))
+    np.testing.assert_allclose(got_i, got_r, rtol=1e-4, atol=1e-4)
+    want_q = _dequant_dense(a, mode) @ _dequant_dense(b, mode)
+    for i, (r, c) in enumerate(zip(plan.c_brow, plan.c_bcol)):
+        tile_q = want_q[r * 32:(r + 1) * 32, c * 32:(c + 1) * 32]
+        np.testing.assert_allclose(got_i[i], tile_q, rtol=1e-3, atol=1e-3)
+
+
+def test_rowwise_vjp_dx_matches_dequantized_dense():
+    """transpose_lhs rowwise kernels dequantize pre-dot, so the backward
+    x-gradient matches the dequantized dense oracle."""
+    a = _outlier_bsr(24)
+    plan = api.plan_matmul(a, with_grad=True, quantize="int8.rowwise",
+                           n_lanes=2)
+    x = jnp.asarray(RNG.standard_normal((a.shape[1], 24)).astype(np.float32))
+    gx = jax.grad(lambda xx: jnp.sum(
+        api.apply_plan(plan, xx, backend="interpret") ** 2))(x)
+    w_deq = jnp.asarray(_dequant_dense(a, "int8.rowwise"))
+    gx_d = jax.grad(lambda xx: jnp.sum((w_deq @ xx) ** 2))(x)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_d),
+                               rtol=1e-3, atol=1e-3)
+
+
+def test_rowwise_and_per_block_plans_never_collide():
+    """The full mode string is the plan's block_dtype: "int8" and
+    "int8.rowwise" plans of the same pattern get distinct fingerprints and
+    distinct cache entries."""
+    a = _random_bsr(25)
+    api.clear_plan_cache()
+    p_blk = api.plan_matmul(a, quantize="int8")
+    p_row = api.plan_matmul(a, quantize="int8.rowwise")
+    assert p_blk.block_dtype == "int8" and p_row.block_dtype == "int8.rowwise"
+    assert p_blk.fingerprint != p_row.fingerprint
+    assert p_blk.lhs_scales.ndim == 1 and p_row.lhs_scales.ndim == 2
+    stats = api.plan_cache_stats()
+    assert stats["by_dtype"].get("int8") == 1
+    assert stats["by_dtype"].get("int8.rowwise") == 1
+
+
+def test_rowwise_traffic_prices_scale_rows():
+    """Rowwise A-fetch traffic carries bm fp32 scales per block fetch where
+    per-block carries one; payload bytes are identical."""
+    a = _random_bsr(26)
+    t_blk = api.plan_matmul(a, quantize="int8", cache=False).traffic
+    t_row = api.plan_matmul(a, quantize="int8.rowwise", cache=False).traffic
+    bm = 32
+    n_fetch = t_blk["a_bytes"] / (bm * bm * 1 + 4)
+    assert t_row["a_bytes"] == pytest.approx(n_fetch * (bm * bm * 1 + bm * 4))
+
+
+def test_rowwise_scale_agreement_verifier():
+    """verify_plan(level="full") passes a healthy rowwise plan and flags a
+    scale array of the wrong granularity."""
+    a = _random_bsr(27)
+    plan = api.plan_matmul(a, quantize="int8.rowwise", cache=False)
+    plan.verify(level="full").raise_if_findings()
+    bad = plan.replace(lhs_scales=plan.lhs_scales[:, :1])
+    findings = bad.verify(level="fast").findings
+    assert any(f.invariant == "scale-agreement" and "per block row"
+               in f.message for f in findings)
+
+
+def test_sparse_linear_quantize_carries_full_planner_config():
+    """Regression: quantize() used to rebuild the plan with only
+    lanes/unroll/backend, silently dropping the pipeline switch and the
+    tuned bn_hint."""
+    from repro.models.sparse_ffn import SparseLinear
+    layer, params = SparseLinear.create(jax.random.PRNGKey(3), 128, 64,
+                                        block=32, density=0.4)
+    tuned = SparseLinear(plan=layer.plan.replace(pipeline=False, bn_hint=128),
+                         d_out=64, d_in=128)
+    qlayer, _ = tuned.quantize(params, "int8")
+    assert qlayer.plan.pipeline is False
+    assert qlayer.plan.bn_hint == 128
+    assert qlayer.plan.n_lanes == tuned.plan.n_lanes
+    assert qlayer.plan.unroll == tuned.plan.unroll
+
+
+def test_sparse_linear_quantize_fold_plan_raises():
+    """fold_len is not recorded on a plan, so quantize() on a fold-built
+    layer must raise instead of silently re-planning without the fold."""
+    from repro.models.sparse_ffn import SparseLinear
+    a = BSR.random(np.random.default_rng(28), (128, 256), (32, 32), 0.8)
+    plan = api.plan_matmul(a, policy="segment", fold_len=2, with_grad=True,
+                           cache=False)
+    assert np.any(np.asarray(plan.accum_prev))   # the fold actually folded
+    layer = SparseLinear(plan=plan, d_out=128, d_in=256)
+    with pytest.raises(ValueError, match="fold_len"):
+        layer.quantize({"blocks": np.asarray(plan.lhs_blocks)}, "int8")
+
+
+# ---------------------------------------------------------------------------
+# whole-model quantization (Transformer.quantize)
+# ---------------------------------------------------------------------------
+
+
+def _sparse_model():
+    import dataclasses
+    from repro.configs import REGISTRY, reduced_config
+    from repro.models import build_model
+    cfg = dataclasses.replace(reduced_config(REGISTRY["phi3-mini-3.8b"]),
+                              dtype="float32", ffn_block_sparse=True,
+                              ffn_block=32, ffn_density=0.5)
+    model = build_model(cfg)
+    return cfg, model, model.init(jax.random.PRNGKey(4))
+
+
+@pytest.mark.parametrize("mode", ["int8", "int8.rowwise"])
+def test_transformer_quantize_param_tree_and_logits(mode):
+    cfg, model, params = _sparse_model()
+    qmodel, qparams = model.quantize(params, mode)
+    assert qmodel.sparse_mlp.up.plan.block_dtype == mode
+    # FFN leaves became payload + scales with the layer stacking intact
+    for proj in ("up", "gate", "down"):
+        leaf32 = params["layers"]["mlp"][proj]
+        leaf = qparams["layers"]["mlp"][proj]
+        assert leaf["blocks"].dtype == QUANT_DTYPES["int8"]
+        assert leaf["blocks"].shape == leaf32["blocks"].shape
+        n_layers, n_blocks = leaf32["blocks"].shape[:2]
+        want_scales = ((n_layers, n_blocks, 32) if mode.endswith("rowwise")
+                       else (n_layers, n_blocks))
+        assert leaf["scales"].shape == want_scales
+    # non-FFN params pass through untouched
+    assert qparams["embed"] is params["embed"]
+    assert qparams["layers"]["attn"] is params["layers"]["attn"]
+    # forward logits stay close to fp32
+    toks = (jnp.arange(2 * 8).reshape(2, 8) * 13) % cfg.vocab
+    with api.use_backend("interpret"):
+        lo32, _ = model.forward(params, toks)
+        loq, _ = qmodel.forward(qparams, toks)
+    rel = float(jnp.abs(loq - lo32).max() / jnp.abs(lo32).max())
+    assert rel < REL_TOL["int8"], rel
+    # the original model+params still serve fp32 (no in-place mutation)
+    assert model.sparse_mlp.up.plan.block_dtype == "fp32"
+
+
+def test_transformer_quantize_rejects_double_and_dense():
+    import dataclasses
+    from repro.configs import REGISTRY, reduced_config
+    from repro.models import build_model
+    _, model, params = _sparse_model()
+    qmodel, qparams = model.quantize(params, "int8")
+    with pytest.raises(ValueError, match="already quantized"):
+        qmodel.quantize(qparams, "int8")
+    with pytest.raises(ValueError, match="already quantized"):
+        model.quantize(qparams, "int8")
+    dense_cfg = dataclasses.replace(
+        reduced_config(REGISTRY["phi3-mini-3.8b"]), dtype="float32")
+    dense = build_model(dense_cfg)
+    with pytest.raises(ValueError, match="block-sparse"):
+        dense.quantize(dense.init(jax.random.PRNGKey(5)), "int8")

@@ -229,3 +229,115 @@ def test_enc_dec_rejected():
     params = model.init(KEY)
     with pytest.raises(NotImplementedError):
         Engine(model, params)
+
+
+# ---------------------------------------------------------------------------
+# quantized serving (int8/fp8 weight decode through the engine)
+# ---------------------------------------------------------------------------
+
+
+def _sparse_setup(**over):
+    return _setup("granite-3-8b", ffn_block_sparse=True, ffn_block=32,
+                  ffn_density=0.5, **over)
+
+
+def test_quantized_engine_matches_single_request_oracle():
+    """The mixed-length oracle holds *within* each quantized engine: a
+    batched run with slot churn is token-for-token identical to serving
+    each request alone on the same quantized weights."""
+    cfg, model, params = _sparse_setup()
+    prompts = _prompts(cfg, (4, 17, 9), seed=11)
+    for mode in ("int8", "fp8"):
+        alone = []
+        for p in prompts:
+            e1 = Engine(model, params, slots=1, max_len=64,
+                        prefill_buckets=(16, 8), quantize=mode)
+            r = Request(prompt=p.copy(), max_new_tokens=5)
+            e1.generate([r])
+            alone.append(r.out_tokens.tolist())
+        eng = Engine(model, params, slots=2, max_len=64,
+                     prefill_buckets=(16, 8), quantize=mode)
+        reqs = [Request(prompt=p.copy(), max_new_tokens=5) for p in prompts]
+        eng.generate(reqs)
+        assert [r.out_tokens.tolist() for r in reqs] == alone, mode
+
+
+def test_quantized_greedy_drift_bounded():
+    """fp32 vs int8 vs fp8 engines on the same mixed-length batch: greedy
+    tokens may drift where logits are near-ties, but the drift fraction
+    stays small (int8 tighter than fp8)."""
+    cfg, model, params = _sparse_setup()
+    prompts = _prompts(cfg, (4, 17, 9, 25, 6), seed=12)
+
+    def serve(mode):
+        eng = Engine(model, params, slots=2, max_len=64,
+                     prefill_buckets=(16, 8), quantize=mode)
+        reqs = [Request(prompt=p.copy(), max_new_tokens=6) for p in prompts]
+        eng.generate(reqs)
+        return [r.out_tokens.tolist() for r in reqs]
+
+    base = serve(None)
+    total = sum(len(t) for t in base)
+    for mode, bound in (("int8", 0.25), ("int8.rowwise", 0.25),
+                        ("fp8", 0.5)):
+        out = serve(mode)
+        drift = sum(a != b for x, y in zip(base, out) for a, b in zip(x, y))
+        assert drift / total <= bound, (mode, drift, total)
+
+
+def test_quantized_engine_no_retrace():
+    """Quantized params keep the engine's retrace-flatness contract: one
+    decode trace + the same prefill trace count as the fp32 engine, flat
+    across later waves of new lengths/budgets."""
+    cfg, model, params = _sparse_setup()
+
+    def warm_counts(mode):
+        eng = Engine(model, params, slots=2, max_len=64,
+                     prefill_buckets=(16,), quantize=mode)
+        eng.generate([Request(prompt=p, max_new_tokens=3)
+                      for p in _prompts(cfg, (5, 20), seed=13)])
+        return eng, dict(eng.compiled_shapes)
+
+    _, fp32_warm = warm_counts(None)
+    eng, warm = warm_counts("int8")
+    assert warm["decode"] == 1
+    assert warm == fp32_warm
+    eng.generate([Request(prompt=p, max_new_tokens=m)
+                  for p, m in zip(_prompts(cfg, (3, 21, 13, 30), seed=14),
+                                  (2, 5, 1, 3))])
+    assert eng.compiled_shapes == warm
+
+
+def test_quantized_engine_composes_with_int8_kv_cache():
+    """int8 weights + int8 KV cache serve together; the bucket cap and the
+    single-request oracle both hold."""
+    cfg, model, params = _sparse_setup(kv_cache_dtype="int8")
+    prompts = _prompts(cfg, (4, 17), seed=15)
+    alone = []
+    for p in prompts:
+        e1 = Engine(model, params, slots=1, max_len=64, quantize="int8")
+        r = Request(prompt=p.copy(), max_new_tokens=4)
+        e1.generate([r])
+        alone.append(r.out_tokens.tolist())
+    eng = Engine(model, params, slots=2, max_len=64, quantize="int8")
+    assert max(eng.prefill_buckets) <= 8
+    reqs = [Request(prompt=p.copy(), max_new_tokens=4) for p in prompts]
+    eng.generate(reqs)
+    assert [r.out_tokens.tolist() for r in reqs] == alone
+
+
+def test_engine_quantize_requires_sparse_ffn():
+    cfg, model, params = _setup()   # dense SwiGLU FFN
+    with pytest.raises(ValueError, match="block-sparse"):
+        Engine(model, params, quantize="int8")
+
+
+def test_int8_kv_long_query_raises_named_error():
+    """The decode-size guard on the int8 KV path is a ValueError, not a
+    bare assert (serving stacks run under ``python -O``)."""
+    import jax.numpy as jnp
+    cfg, model, params = _setup(kv_cache_dtype="int8")
+    cache = model.init_cache(1, 64)
+    with pytest.raises(ValueError, match="decode-sized"):
+        model.decode_step(params, cache, jnp.zeros((1, 16), jnp.int32),
+                          jnp.int32(0))
