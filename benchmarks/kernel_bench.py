@@ -16,7 +16,14 @@ fp32/int8/fp8 block storage and reports traffic-bytes ratios vs fp32 plus
 normalized max error vs the dense fp32 oracle (CI gates both).  The
 pipeline sweep checks the DMA-pipeline fetch contract (modeled fetch count
 == schedule fetch-flag count, exactly, both kernels) and tracks interpret
-wall time vs the non-pipelined baseline.
+wall time vs the non-pipelined baseline.  The prefetch sweep runs the lane
+case with ``prefetch="cross_pass"`` across a two-N-tile grid and gates the
+mode end to end: bit-exact parity vs the drained schedule, the traffic
+model's ``prefetch_fetches`` against an independent head-window fetch-flag
+sum, a clean full-level verify, zero inter-pass ordering findings from
+``repro.analysis.order`` over the traced kernels, and an interpret
+wall-time ratio (the overlap win itself needs real hardware — interpret
+replays every copy inline, so CI only gates against regressions).
 """
 from __future__ import annotations
 
@@ -29,7 +36,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro import api
-from repro.analysis import check_scale_agreement, plan_vmem_bytes, verify_plan
+from repro.analysis import (analyze_callable, check_scale_agreement,
+                            plan_vmem_bytes, verify_plan)
 from repro.core.formats import BSR
 from repro.kernels.segment_spmm import segment_spmm
 
@@ -296,6 +304,91 @@ def pipeline_sweep(repeats: int = 12) -> dict:
     return out
 
 
+def prefetch_sweep(repeats: int = 12) -> dict:
+    """Cross-pass DMA prefetch vs the drained schedule, end to end.
+
+    Runs the lane case (256 columns at ``bn=128`` — two N-tile passes, so
+    the cross-pass tail actually executes) with and without
+    ``prefetch="cross_pass"`` and reports everything CI gates:
+
+    * ``parity_err`` — max abs difference between the two modes' outputs
+      (the fetch flags are identical under both, so this must be 0.0);
+    * ``model_prefetch_fetches`` / ``flag_prefetch_fetches`` — the traffic
+      model's overlapped-fetch count vs an independent sum of the
+      schedule's fetch flags over each lane's first-``unroll`` head window
+      (the copies the kernel issues from the previous pass's tail) —
+      gated exactly equal;
+    * ``verify_findings`` / ``order_findings`` — full-level plan
+      verification plus the :mod:`repro.analysis.order` happens-before
+      rules (``cross-pass-war``/``sem-carryover``/``prefetch-raw``/
+      ``dma-priority``) over the traced kernels of both modes, all gated
+      at zero — no prefetch schedule ships uncertified;
+    * wall time — interleaved interpret medians for both modes.  The
+      interpreter replays every DMA inline and additionally evaluates the
+      prefetch schedule's extra tail/prologue guards every grid step, so
+      prefetch cannot win here (steady state measures ~1.25-1.3x); the
+      ratio is gated ≤ 1.5 to catch pathological regressions, and the
+      overlap win itself is a real-TPU follow-up.
+    """
+    rng = np.random.default_rng(7)
+    a = _balanced_bsr(rng)
+    bd = jnp.asarray(rng.standard_normal(
+        (LANE_CASE["shape"][1], LANE_CASE["n_cols"])).astype(np.float32))
+    want = a.to_dense() @ np.asarray(bd)
+    bn = LANE_CASE["bn"]
+
+    plans = {
+        "no_prefetch": api.plan_matmul(a, bd.shape, n_lanes=2, unroll=2,
+                                       cache=False),
+        "prefetch": api.plan_matmul(a, bd.shape, n_lanes=2, unroll=2,
+                                    cache=False, prefetch="cross_pass"),
+    }
+    fn = jax.jit(lambda p, x: api.execute_plan(
+        p, x, bn=bn, backend="interpret"))
+    got = {label: np.asarray(fn(p, bd)) for label, p in plans.items()}
+
+    pf = plans["prefetch"]
+    tr = pf.traffic
+    n_lanes, unroll = pf.n_lanes, pf.unroll
+    head = slice(0, unroll)
+    flag_sum = int(
+        np.asarray(pf.a_fetch).reshape(n_lanes, -1)[:, head].sum()
+        + np.asarray(pf.b_fetch).reshape(n_lanes, -1)[:, head].sum())
+    out = {
+        "n_tiles_n": LANE_CASE["n_cols"] // bn,
+        "parity_err": float(
+            np.abs(got["prefetch"] - got["no_prefetch"]).max()),
+        "max_err": float(np.abs(got["prefetch"] - want).max()),
+        "model_prefetch_fetches": int(tr["prefetch_fetches"]),
+        "flag_prefetch_fetches": flag_sum,
+        "verify_findings": len(verify_plan(pf, level="full").findings),
+    }
+
+    # inter-pass ordering certification of both executions (the merged
+    # analyzer includes ORDER_RULES; prefetch's traced grid carries the
+    # demoted N-tile axis, so the cross-pass rules are non-vacuous)
+    n_order = 0
+    for label, p in plans.items():
+        n_order += len(analyze_callable(
+            lambda x: api.execute_plan(p, x, bn=bn, backend="interpret"),
+            bd, label=f"bench-{label}"))
+    out["order_findings"] = n_order
+
+    times = {label: [] for label in plans}
+    for _ in range(repeats):
+        for label, p in plans.items():
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(p, bd))
+            times[label].append((time.perf_counter() - t0) * 1e6)
+    for label, ts in times.items():
+        ts = sorted(ts)
+        out[f"{label}_us"] = ts[len(ts) // 2]
+        out[f"{label}_us_min"] = ts[0]
+    out["interpret_ratio_vs_no_prefetch"] = (
+        out["prefetch_us_min"] / out["no_prefetch_us_min"])
+    return out
+
+
 AUTOTUNE_N_COLS = 256
 
 # pattern generators for the autotune sweep: the three traffic-sweep cases
@@ -432,6 +525,11 @@ def run(csv: Csv) -> dict:
     csv.add("kernel/spmm_pipeline_interpret", pipe["pipelined_us"],
             f"legacy={pipe['legacy_us']:.0f}us;"
             f"max_err={pipe['max_err_pipelined']:.2e}")
+    pf = prefetch_sweep()
+    csv.add("kernel/spmm_prefetch_interpret", pf["prefetch_us"],
+            f"baseline={pf['no_prefetch_us']:.0f}us;"
+            f"parity_err={pf['parity_err']:.2e};"
+            f"order_findings={pf['order_findings']}")
     tuned = autotune_sweep()
     for name, row in tuned.items():
         if name == "cost_model":
@@ -440,7 +538,7 @@ def run(csv: Csv) -> dict:
                 f"policy={row['policy']};"
                 f"bytes_ratio={row['default_traffic_bytes'] / max(1, row['tuned_traffic_bytes']):.3f}")
     return {"traffic": ratios, "lanes": lanes, "quant": quant,
-            "pipeline": pipe, "autotune": tuned}
+            "pipeline": pipe, "prefetch": pf, "autotune": tuned}
 
 
 def main() -> None:
@@ -451,6 +549,7 @@ def main() -> None:
 
     result = {"traffic": traffic_sweep(), "lanes": lane_sweep(args.repeats),
               "quant": quant_sweep(), "pipeline": pipeline_sweep(args.repeats),
+              "prefetch": prefetch_sweep(args.repeats),
               "autotune": autotune_sweep(args.repeats),
               # case configs as native JSON types (tuples become arrays) so
               # trend tooling can compare run-to-run numerically — str(v)
@@ -463,6 +562,7 @@ def main() -> None:
     print(json.dumps(result["lanes"], indent=2))
     print(json.dumps(result["quant"], indent=2))
     print(json.dumps(result["pipeline"], indent=2))
+    print(json.dumps(result["prefetch"], indent=2))
     print(json.dumps(result["autotune"], indent=2))
     print(f"wrote {args.out}")
 

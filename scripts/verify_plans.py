@@ -3,7 +3,7 @@
 
 Builds plans from the ``repro.sim.matrices`` pattern generators (the same
 structural families the paper benchmarks run) across the planner knob grid
-— lanes × unroll × quantize × policy, SpMM and SpGEMM, plus the
+— lanes × unroll × quantize × prefetch × policy, SpMM and SpGEMM, plus the
 degenerate shapes the verifier must tolerate (single-block schedules,
 empty symbolic C patterns, unpadded ``n_lanes=1``) — and runs
 ``repro.analysis.verify_plan`` on each.  Any finding is a bug in either
@@ -53,10 +53,13 @@ PATTERNS = (
 )
 
 SPMM_GRID = tuple(
-    dict(n_lanes=l, unroll=u, quantize=q)
-    for l in (1, 2, 4) for u in (1, 2) for q in (None, "int8", "int8.rowwise"))
+    dict(n_lanes=l, unroll=u, quantize=q, prefetch=p)
+    for l in (1, 2, 4) for u in (1, 2)
+    for q in (None, "int8", "int8.rowwise")
+    for p in (None, "cross_pass"))
 SPGEMM_GRID = tuple(
-    dict(n_lanes=l, unroll=u) for l in (1, 2) for u in (1, 2))
+    dict(n_lanes=l, unroll=u, prefetch=p)
+    for l in (1, 2) for u in (1, 2) for p in (None, "cross_pass"))
 
 
 def _pattern_bsr(gen, rng, dim: int, density: float) -> BSR:
@@ -97,7 +100,8 @@ def sweep(level: str, scale: int, seed: int, quiet: bool,
             continue
         for kw in SPMM_GRID:
             label = (f"spmm/{name} lanes={kw['n_lanes']} "
-                     f"unroll={kw['unroll']} quant={kw['quantize']}")
+                     f"unroll={kw['unroll']} quant={kw['quantize']} "
+                     f"pf={kw['prefetch']}")
             check(label, api.plan_matmul(a, policy="segment", fold_len=4,
                                          with_grad=kw["quantize"] is None,
                                          cache=False, **kw))
@@ -105,7 +109,7 @@ def sweep(level: str, scale: int, seed: int, quiet: bool,
         if b.nblocks:
             for kw in SPGEMM_GRID:
                 label = (f"spgemm/{name} lanes={kw['n_lanes']} "
-                         f"unroll={kw['unroll']}")
+                         f"unroll={kw['unroll']} pf={kw['prefetch']}")
                 check(label, api.plan_matmul(a, b, policy="segment",
                                              cache=False, **kw))
 
@@ -114,7 +118,8 @@ def sweep(level: str, scale: int, seed: int, quiet: bool,
         a = BSR.random(rng, (scale, scale), BLOCK, density)
         for kw in SPMM_GRID:
             label = (f"spmm/random{density} lanes={kw['n_lanes']} "
-                     f"unroll={kw['unroll']} quant={kw['quantize']}")
+                     f"unroll={kw['unroll']} quant={kw['quantize']} "
+                     f"pf={kw['prefetch']}")
             check(label, api.plan_matmul(a, policy="segment", cache=False,
                                          **kw))
 
@@ -157,7 +162,8 @@ def sweep(level: str, scale: int, seed: int, quiet: bool,
             label = (f"autotuned/{name} obj={objective} "
                      f"policy={kw['policy']} lanes={kw['n_lanes']} "
                      f"unroll={kw['unroll']} fold={kw['fold_len']} "
-                     f"pipe={kw['pipeline']} bn={kw['bn_hint']}")
+                     f"pipe={kw['pipeline']} bn={kw['bn_hint']} "
+                     f"pf={kw['prefetch']}")
             check(label, plan)
             n_autotuned += 1
 

@@ -19,6 +19,14 @@ accelerator):
   parallel-race, ring-slot WAR, semaphore-balance, and VMEM-budget
   proofs are derived.  :class:`VmemBudgetError` is the named plan-time
   error the planner's ``vmem_limit_bytes`` gate raises.
+* :mod:`repro.analysis.order` — the inter-pass ordering analyzer.
+  :func:`build_order` lifts the access IR into a whole-execution
+  happens-before model (:class:`HappensBefore`: sequential program edges,
+  parallel incomparability, pass structure, DMA start→wait edges), from
+  which the ``ORDER_RULES`` proofs are derived — ``cross-pass-war``,
+  ``sem-carryover``, ``prefetch-raw``, and ``dma-priority`` — the rules
+  that certify the kernels' ``prefetch="cross_pass"`` mode hazard-free
+  before CI lets it execute.
 
 Layering: this package imports ``repro.core`` only.  ``repro.api`` sits
 above it (the ``verify=`` hooks), and ``core.schedule`` reaches down
@@ -37,6 +45,10 @@ from .jaxpr_lint import (RULES, LintFinding, analyze_callable,
                          analyze_shipped_kernels, find_pallas_kernels,
                          lint_callable, lint_kernel_jaxpr,
                          lint_segment_kernels)
+from .order import (ORDER_RULES, HappensBefore, build_order,
+                    check_cross_pass_war, check_dma_priority, check_order,
+                    check_prefetch_raw, check_sem_carryover,
+                    pass_local_chains)
 from .races import (ANALYZER_RULES, check_parallel_races, check_ring_war,
                     check_sem_balance)
 from .ranges import check_ranges
@@ -51,6 +63,9 @@ __all__ = [
     "analyze_callable", "analyze_shipped_kernels", "kernel_ir_from_eqn",
     "trace_kernel_irs", "check_ranges", "check_parallel_races",
     "check_ring_war", "check_sem_balance",
+    "ORDER_RULES", "HappensBefore", "build_order", "check_order",
+    "check_cross_pass_war", "check_sem_carryover", "check_prefetch_raw",
+    "check_dma_priority", "pass_local_chains",
     "DEFAULT_VMEM_LIMIT_BYTES", "VmemBudgetError", "check_plan_vmem",
     "check_vmem_budget", "kernel_vmem_bytes", "plan_vmem_bytes",
     "spgemm_vmem_bytes", "spmm_vmem_bytes",

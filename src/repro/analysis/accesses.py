@@ -139,6 +139,13 @@ class KernelIR:
         """Grid coordinates of flattened point ``p`` (row-major)."""
         return tuple(int(c[p]) for c in self.coords)
 
+    @property
+    def sequential_axes(self) -> Tuple[int, ...]:
+        """Grid axes *not* declared parallel, outermost first — the axes
+        Mosaic executes in program order within one parallel iteration."""
+        return tuple(ax for ax in range(len(self.grid))
+                     if ax not in self.parallel_axes)
+
     def may_mask(self, a: Access) -> np.ndarray:
         """Guard as a may-execute mask (unknown guards → everywhere)."""
         if a.certain and a.mask is not None:

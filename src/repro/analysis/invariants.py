@@ -564,6 +564,12 @@ def check_traffic_agreement(plan, path: str = "plan") -> List[Finding]:
     ``plan.traffic`` counts follow the plan's ``pipeline`` switch — a
     ``pipeline=False`` plan records legacy per-BlockSpec-stream pricing and
     is checked against that model.
+
+    A ``prefetch="cross_pass"`` plan records a ``prefetch_fetches`` count
+    (the copies the kernel overlaps with each pass boundary); the model is
+    recomputed under the same mode and must agree exactly — cross-pass
+    prefetch never changes *which* items fetch, so the a/b counts above are
+    mode-independent by construction.
     """
     out: List[Finding] = []
     a_fetch = _host(getattr(plan, "a_fetch", None))
@@ -575,6 +581,7 @@ def check_traffic_agreement(plan, path: str = "plan") -> List[Finding]:
         return out
     n_lanes, unroll = plan.n_lanes, plan.unroll
     pipelined = bool(getattr(plan, "pipeline", True))
+    prefetch = getattr(plan, "prefetch", None)
     if plan.kind == "spmm":
         m = _host(plan.m_idx)
         k = _host(plan.k_idx)
@@ -582,9 +589,9 @@ def check_traffic_agreement(plan, path: str = "plan") -> List[Finding]:
             return out
         model = lane_traffic_spmm(m, k, seg_start, valid.astype(bool),
                                   n_lanes, 1, 1, 1, unroll=unroll)
-        rec_model = model if pipelined else lane_traffic_spmm(
+        rec_model = lane_traffic_spmm(
             m, k, seg_start, valid.astype(bool), n_lanes, 1, 1, 1,
-            unroll=unroll, pipeline=False)
+            unroll=unroll, pipeline=pipelined, prefetch=prefetch)
     else:
         a_idx, b_idx, c_idx = (_host(plan.a_idx), _host(plan.b_idx),
                                _host(plan.c_idx))
@@ -593,9 +600,9 @@ def check_traffic_agreement(plan, path: str = "plan") -> List[Finding]:
         model = lane_traffic_spgemm(a_idx, b_idx, c_idx, seg_start,
                                     valid.astype(bool), n_lanes, 1, 1, 1,
                                     unroll=unroll)
-        rec_model = model if pipelined else lane_traffic_spgemm(
+        rec_model = lane_traffic_spgemm(
             a_idx, b_idx, c_idx, seg_start, valid.astype(bool), n_lanes,
-            1, 1, 1, unroll=unroll, pipeline=False)
+            1, 1, 1, unroll=unroll, pipeline=pipelined, prefetch=prefetch)
     recorded = dict(getattr(plan, "traffic_items", ()) or ())
     for stream, flags in (("a", a_fetch), ("b", b_fetch)):
         n_model = int(model[f"{stream}_fetches"])
@@ -618,6 +625,17 @@ def check_traffic_agreement(plan, path: str = "plan") -> List[Finding]:
                 f"(pipeline={'on' if pipelined else 'off'} pricing) — the "
                 f"recorded estimate is stale or was tampered with",
                 stream=stream, path=path))
+    n_pf_rec = recorded.get("prefetch_fetches")
+    if n_pf_rec is not None:
+        n_pf_model = int(rec_model.get("prefetch_fetches", 0))
+        if int(n_pf_rec) != n_pf_model:
+            out.append(Finding(
+                "traffic-agreement",
+                f"plan.traffic records {int(n_pf_rec)} overlapped prefetch "
+                f"fetches but the model recomputes {n_pf_model} under "
+                f"prefetch={prefetch!r} — the recorded estimate is stale "
+                f"or the mode changed without re-pricing",
+                stream="prefetch", path=path))
     return out
 
 

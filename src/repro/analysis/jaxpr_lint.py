@@ -339,6 +339,7 @@ def _analyze_trace(closed, args, label: str, vmem_limit=None,
     """Syntactic lint + every symbolic rule over one traced jaxpr."""
     from .accesses import find_kernel_invocations, kernel_ir_from_eqn
     from .budget import DEFAULT_VMEM_LIMIT_BYTES, check_vmem_budget
+    from .order import check_order
     from .races import (check_parallel_races, check_ring_war,
                         check_sem_balance)
     from .ranges import check_ranges
@@ -358,6 +359,7 @@ def _analyze_trace(closed, args, label: str, vmem_limit=None,
         findings.extend(check_parallel_races(ir))
         findings.extend(check_ring_war(ir))
         findings.extend(check_sem_balance(ir))
+        findings.extend(check_order(ir))
         findings.extend(check_vmem_budget(ir, limit))
         if verbose:
             n = len(findings) - before
@@ -372,7 +374,9 @@ def analyze_callable(fn, *args, label: Optional[str] = None,
                      **kwargs) -> List[LintFinding]:
     """Trace ``fn(*args, **kwargs)`` and run the syntactic linter plus the
     full symbolic rule set (index-range, parallel-race, ring-slot-war,
-    sem-balance, vmem-budget) on every Pallas kernel inside.
+    sem-balance, vmem-budget, and the inter-pass ordering rules
+    cross-pass-war / sem-carryover / prefetch-raw / dma-priority) on every
+    Pallas kernel inside.
 
     Scalar-prefetch operands are resolved from the trace's constants and
     the concrete ``args``, so the proofs are exact over the traced grid.
@@ -394,6 +398,13 @@ def analyze_shipped_kernels(verbose: bool = False) -> List[LintFinding]:
     the non-Segment kernels — ``flash_attention`` (causal, and
     windowed+GQA to exercise the ``rem``-guarded skip path), ``moe_gemm``,
     and ``rg_lru`` — so their ``parallel`` axes get the same race proof.
+
+    The ``prefetch="cross_pass"`` variants run at ``bn=32`` so the traced
+    grid carries two N tiles — with a single tile the cross-pass tail
+    guard is never true and the ordering proofs would be vacuous.  Every
+    prefetch-enabled variant must prove clean under the inter-pass rules
+    (cross-pass-war, sem-carryover, prefetch-raw, dma-priority) before CI
+    lets it ship.
     """
     import jax.numpy as jnp
     import numpy as np
@@ -410,17 +421,23 @@ def analyze_shipped_kernels(verbose: bool = False) -> List[LintFinding]:
     b = BSR.random(np.random.default_rng(1), (128, 128), (32, 32), 0.5)
     x = jnp.zeros((128, 64), jnp.float32)
 
-    def spmm(n_lanes, unroll, **kw):
+    def spmm(n_lanes, unroll, bn=64, **kw):
         p = plan_matmul(a, policy="segment", n_lanes=n_lanes, unroll=unroll,
                         cache=False, **kw)
         return p, lambda: jax.make_jaxpr(
-            lambda xx: execute_plan(p, xx, bn=64, backend="interpret"))(x)
+            lambda xx: execute_plan(p, xx, bn=bn, backend="interpret"))(x)
 
     plan, _ = spmm(2, 2, with_grad=True)
     gplan = plan_matmul(a, b, policy="segment", n_lanes=2, unroll=2,
                         cache=False)
     gplan1 = plan_matmul(a, b, policy="segment", n_lanes=1, unroll=1,
                          cache=False)
+    # cross-pass prefetch variants: bn=32 over the 64-wide rhs → two N
+    # tiles, so the traced grid actually contains the tail-issue pass
+    # boundary the ordering rules certify
+    pf_plan, _ = spmm(2, 2, bn=32, with_grad=True, prefetch="cross_pass")
+    gplan_pf = plan_matmul(a, b, policy="segment", n_lanes=2, unroll=2,
+                           cache=False, prefetch="cross_pass")
 
     q = jnp.zeros((2, 256, 64), jnp.float32)
     kv = jnp.zeros((2, 256, 64), jnp.float32)
@@ -445,12 +462,27 @@ def analyze_shipped_kernels(verbose: bool = False) -> List[LintFinding]:
         ("spmm-quantized-fp8", spmm(1, 1, quantize="fp8")[1], (x,)),
         ("spmm-lanes1", spmm(1, 1)[1], (x,)),
         ("spmm-lanes4", spmm(4, 2)[1], (x,)),
+        ("spmm-prefetch",
+         lambda: jax.make_jaxpr(
+             lambda xx: execute_plan(pf_plan, xx, bn=32,
+                                     backend="interpret"))(x), (x,)),
+        ("spmm-prefetch-grad",
+         lambda: jax.make_jaxpr(jax.grad(
+             lambda xx: apply_plan(pf_plan, xx, bn=32,
+                                   backend="interpret").sum()))(x), (x,)),
+        ("spmm-prefetch-quant-int8",
+         spmm(2, 2, bn=32, quantize="int8", prefetch="cross_pass")[1], (x,)),
+        ("spmm-prefetch-lanes1",
+         spmm(1, 1, bn=32, prefetch="cross_pass")[1], (x,)),
         ("spgemm-pipelined",
          lambda: jax.make_jaxpr(
              lambda: execute_plan(gplan, backend="interpret"))(), ()),
         ("spgemm-lanes1",
          lambda: jax.make_jaxpr(
              lambda: execute_plan(gplan1, backend="interpret"))(), ()),
+        ("spgemm-prefetch",
+         lambda: jax.make_jaxpr(
+             lambda: execute_plan(gplan_pf, backend="interpret"))(), ()),
         ("spmm-legacy",
          lambda: jax.make_jaxpr(lambda xx: segment_spmm(
              plan.lhs_blocks, plan.slot_idx, plan.m_idx, plan.k_idx,
@@ -497,8 +529,9 @@ def main(argv=None) -> int:
               f"({len(RULES)} rules: {', '.join(sorted(RULES))})")
         findings = lint_segment_kernels(verbose=verbose)
     else:
+        from .order import ORDER_RULES
         from .races import ANALYZER_RULES
-        rules = sorted(set(RULES) | set(ANALYZER_RULES))
+        rules = sorted(set(RULES) | set(ANALYZER_RULES) | set(ORDER_RULES))
         print("analyzing shipped Pallas kernels "
               f"({len(rules)} rules: {', '.join(rules)})")
         findings = analyze_shipped_kernels(verbose=verbose)

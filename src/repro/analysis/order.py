@@ -1,0 +1,495 @@
+"""Whole-execution happens-before model + inter-pass ordering proofs.
+
+The :mod:`races` rules prove safety *within* one pass — one sweep of the
+innermost sequential axis under a fixed parallel signature (for the SpMM
+pipeline, one (lane, N-tile) sweep).  Cross-pass DMA prefetch breaks that
+frame on purpose: a copy issued during pass *i*'s tail is discharged by
+pass *i+1*'s first wait, so ring-slot residency and semaphore state now
+cross the pass boundary.  This module lifts the per-grid-point access IR
+(:class:`~.accesses.KernelIR`) into a happens-before model over the whole
+execution:
+
+* **program edges** — grid points under one parallel signature execute in
+  row-major sequential-axis order (one *chain* per signature);
+* **parallel incomparability** — points in different chains are unordered;
+  nothing here may be assumed about cross-lane timing (that is
+  :func:`races.check_parallel_races`' department);
+* **pass structure** — within a chain, the coordinates of every sequential
+  axis *except the innermost* name the pass; the boundary between ordinals
+  is where the pre-prefetch pipeline drains and where prefetch state now
+  survives;
+* **DMA edges** — a ``dma_start`` happens-before the ``dma_wait`` that
+  discharges its (semaphore, slot); a ring slot's reuse is ordered by the
+  FIFO of outstanding copies into it.
+
+Four rules consume the model (:data:`ORDER_RULES`):
+
+``cross-pass-war``
+    An in-flight copy never lands on a ring slot a later-ordered grid
+    point of an *earlier* pass still reads.  Per chain, a FIFO of
+    outstanding starts per (ref, slot) is replayed; a read whose slot has
+    an outstanding start from a different pass is the clobber hazard the
+    prefetch mode makes possible.  Same-pass read-under-copy stays with
+    :func:`races.check_ring_war` (which runs pass-locally).
+
+``sem-carryover``
+    Per-(semaphore, slot) balance holds at every pass boundary, not just
+    at kernel exit: a start issued while a start from an earlier pass is
+    still outstanding on the same (sem, slot) means the carried-over copy
+    was never discharged where the next pass expected it.
+    :func:`races.check_sem_balance` only checks whole-chain totals, which
+    a doubled start + doubled wait keeps balanced.
+
+``prefetch-raw``
+    A pass's first consumption waits on the copy that actually filled its
+    slot: the (semaphore, slot) descriptor of the ``dma_wait`` that
+    discharges a ring slot must match the descriptor of the ``dma_start``
+    that last filled it, even when that start was issued from the previous
+    pass's tail.  A wait that reconstructs the wrong descriptor
+    synchronizes with the wrong copy — RAW on the prefetched data.
+
+``dma-priority``
+    The DMA issue order the ROADMAP prescribes: at every grid point where
+    copies into two differently-sized destinations are both issued, the
+    bulkier copy (the B row tile) is issued before the smaller one (the A
+    tile), so large transfers never queue behind small ones.  Asserted
+    statically here so the kernels' issue-phase ordering cannot silently
+    regress.
+
+All rules treat unknown guards conservatively (may-execute for
+hazard-producing events, must-execute for hazard-discharging ones), and
+skip silently where :mod:`races` already emits the "unprovable" finding
+for the same unresolved slot — one finding per root cause.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .accesses import TOP, Access, KernelIR
+from .jaxpr_lint import LintFinding
+
+RULE_XWAR = "cross-pass-war"
+RULE_CARRY = "sem-carryover"
+RULE_PRAW = "prefetch-raw"
+RULE_PRIO = "dma-priority"
+
+#: catalog of the inter-pass ordering rules (the symbolic analyzer keeps
+#: ``ANALYZER_RULES`` in :mod:`races`, the syntactic linter ``RULES`` in
+#: :mod:`jaxpr_lint`).
+ORDER_RULES = {
+    RULE_XWAR: "in-flight copy lands on a slot an earlier pass still reads",
+    RULE_CARRY: "per-(sem, slot) balance violated at a pass boundary",
+    RULE_PRAW: "first consumption waits on a copy other than its filler",
+    RULE_PRIO: "small DMA issued before a bulkier one at the same point",
+}
+
+_NO_SEQ = np.iinfo(np.int64).max
+
+
+# ---------------------------------------------------------------------------
+# the happens-before model
+# ---------------------------------------------------------------------------
+# _slot_at/_chains are duplicated from races.py (races imports *this*
+# module for pass-local chains, so the dependency must point one way).
+
+
+def _slot_at(val, p: int):
+    if val is TOP:
+        return TOP
+    if isinstance(val, str):            # "all": full leading slice
+        return val
+    if isinstance(val, np.ndarray):
+        return int(val[p])
+    return int(val)
+
+
+def _chains(ir: KernelIR) -> List[np.ndarray]:
+    """Grid points grouped by parallel signature, each in row-major
+    (sequential execution) order.  With no parallel axis the whole grid is
+    one sequential chain."""
+    G = ir.n_points
+    if not ir.parallel_axes:
+        return [np.arange(G)]
+    sig = np.zeros(G, dtype=np.int64)
+    for ax in ir.parallel_axes:
+        sig = sig * ir.grid[ax] + ir.coords[ax]
+    order = np.argsort(sig, kind="stable")
+    chains = []
+    sorted_sig = sig[order]
+    start = 0
+    for i in range(1, G + 1):
+        if i == G or sorted_sig[i] != sorted_sig[start]:
+            chains.append(np.sort(order[start:i]))
+            start = i
+    return chains
+
+
+def pass_index(ir: KernelIR) -> np.ndarray:
+    """Row-major pass ordinal of every grid point: the flattened
+    coordinates of every sequential axis *except the innermost*.  A grid
+    with at most one sequential axis is a single pass (all zeros)."""
+    out = np.zeros(ir.n_points, dtype=np.int64)
+    for ax in ir.sequential_axes[:-1]:
+        out = out * ir.grid[ax] + ir.coords[ax]
+    return out
+
+
+@dataclasses.dataclass
+class HappensBefore:
+    """The partial order :func:`build_order` derives from a kernel IR.
+
+    Two grid points are ordered iff they share a chain (same parallel
+    signature); within a chain the order is the row-major sequential
+    sweep, and ``passes`` names each point's pass ordinal along it.
+    """
+
+    ir: KernelIR
+    chains: List[np.ndarray]     # one row-major point array per parallel sig
+    passes: np.ndarray           # (G,) int64 pass ordinal per grid point
+    n_passes: int                # distinct pass ordinals (1 = no pass axis)
+
+    def ordered(self, p: int, q: int) -> bool:
+        """True iff ``p`` happens-before ``q`` (same chain, earlier)."""
+        if p == q:
+            return False
+        for chain in self.chains:
+            in_chain = set(int(x) for x in chain)
+            if p in in_chain:
+                return q in in_chain and p < q
+        return False
+
+
+def build_order(ir: KernelIR) -> HappensBefore:
+    """Lift the per-grid-point IR into the whole-execution model."""
+    passes = pass_index(ir)
+    return HappensBefore(ir=ir, chains=_chains(ir), passes=passes,
+                         n_passes=int(passes.max()) + 1 if passes.size else 1)
+
+
+def pass_local_chains(ir: KernelIR) -> List[np.ndarray]:
+    """Parallel-signature chains split further at every pass boundary.
+
+    This is the frame the *intra*-pass rules (:func:`races.check_ring_war`)
+    run in: in-flight/residency state legitimately crosses a pass boundary
+    only through the cross-pass prefetch contract, which the rules in this
+    module own — so the pass-local rules reset their state at the boundary
+    and the two layers partition the hazard space without overlap.  For a
+    grid with at most one sequential axis this is exactly the per-signature
+    chain split (no behavior change for non-prefetch kernels).
+    """
+    passes = pass_index(ir)
+    out: List[np.ndarray] = []
+    for chain in _chains(ir):
+        pc = passes[chain]
+        start = 0
+        for i in range(1, len(chain) + 1):
+            if i == len(chain) or pc[i] != pc[start]:
+                out.append(chain[start:i])
+                start = i
+    return out
+
+
+# ---------------------------------------------------------------------------
+# event selection helpers
+# ---------------------------------------------------------------------------
+
+
+def _ring_events(ir: KernelIR) -> List[Access]:
+    """dma_dst / dma_wait / read events on every ref that is ever a DMA
+    destination, in kernel program order."""
+    dma_refs = {a.ref.name for a in ir.accesses if a.kind == "dma_dst"}
+    events = [a for a in ir.accesses
+              if a.ref.name in dma_refs
+              and a.kind in ("dma_dst", "dma_wait", "read")]
+    events.sort(key=lambda a: a.seq)
+    return events
+
+
+def _sem_events(ir: KernelIR) -> List[Access]:
+    events = [a for a in ir.accesses
+              if a.kind in ("dma_dst", "dma_wait") and a.sem is not None]
+    events.sort(key=lambda a: a.seq)
+    return events
+
+
+def _sem_unprovable(acc: Access) -> bool:
+    """The events :func:`races.check_sem_balance` already reports as
+    unprovable — skipped silently here (one finding per root cause)."""
+    return (not acc.certain) or acc.in_loop or acc.sem_slot is TOP
+
+
+def _expand(slot, shape) -> List[int]:
+    if slot == "all":
+        return list(range(shape[0] if shape else 1))
+    return [slot]
+
+
+# ---------------------------------------------------------------------------
+# cross-pass-war
+# ---------------------------------------------------------------------------
+
+
+def check_cross_pass_war(ir: KernelIR,
+                         hb: Optional[HappensBefore] = None
+                         ) -> List[LintFinding]:
+    """An in-flight copy never lands on a slot an earlier pass still
+    reads: per chain, replay a FIFO of outstanding starts per (ref, slot);
+    a read whose slot carries an outstanding start from a *different* pass
+    is the cross-boundary clobber.  (Same-pass read-under-copy is
+    :func:`races.check_ring_war`'s finding.)"""
+    findings: List[LintFinding] = []
+    hb = hb or build_order(ir)
+    if hb.n_passes <= 1:
+        return findings
+    events = _ring_events(ir)
+    if not events:
+        return findings
+    flagged = set()
+    for chain in hb.chains:
+        # (ref, slot) -> FIFO of pass ordinals of outstanding starts.  The
+        # FIFO matters: a wait discharges the *oldest* copy into the slot,
+        # so a legal start/wait/start interleave never strands the first
+        # start behind the second's discharge.
+        outstanding: Dict[Tuple[str, int], List[int]] = {}
+        for p in chain:
+            p = int(p)
+            pass_p = int(hb.passes[p])
+            for acc in events:
+                if not ir.may_mask(acc)[p]:
+                    continue
+                slot = _slot_at(acc.slot(), p)
+                if slot is TOP:
+                    continue        # races.ring-slot-war reports unprovable
+                for s in _expand(slot, acc.ref.shape):
+                    key = (acc.ref.name, s)
+                    q = outstanding.setdefault(key, [])
+                    if acc.kind == "dma_dst":
+                        if ir.must_mask(acc)[p] or not acc.certain:
+                            q.append(pass_p)
+                    elif acc.kind == "dma_wait":
+                        if ir.must_mask(acc)[p] and q:
+                            q.pop(0)
+                    else:                           # read
+                        stale = [pp for pp in q if pp != pass_p]
+                        if stale and key not in flagged:
+                            flagged.add(key)
+                            findings.append(LintFinding(
+                                rule=RULE_XWAR,
+                                message=(
+                                    f"slot {s} of {acc.ref.name} read at "
+                                    f"grid{ir.point(p)} (pass {pass_p}) "
+                                    f"while a copy issued in pass "
+                                    f"{stale[0]} is still in flight — the "
+                                    f"cross-pass prefetch lands on a slot "
+                                    f"a later-ordered point still reads"),
+                                kernel=ir.name))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# sem-carryover
+# ---------------------------------------------------------------------------
+
+
+def check_sem_carryover(ir: KernelIR,
+                        hb: Optional[HappensBefore] = None
+                        ) -> List[LintFinding]:
+    """Per-(sem, slot) balance at every pass boundary: a start issued
+    while a start from an *earlier pass* is still outstanding on the same
+    (semaphore, slot) means the carried-over copy was never discharged
+    where the next pass expected it.  Whole-chain totals (what
+    :func:`races.check_sem_balance` proves) stay balanced in exactly this
+    failure, which is why the boundary-granular rule exists."""
+    findings: List[LintFinding] = []
+    hb = hb or build_order(ir)
+    if hb.n_passes <= 1:
+        return findings
+    events = _sem_events(ir)
+    if not events:
+        return findings
+    reported = set()
+    for chain in hb.chains:
+        outstanding: Dict[Tuple[str, int], List[int]] = {}
+        for p in chain:
+            p = int(p)
+            pass_p = int(hb.passes[p])
+            for acc in events:
+                if _sem_unprovable(acc):
+                    continue        # races.sem-balance reports these
+                if acc.mask is None or not acc.mask[p]:
+                    continue
+                slot = _slot_at(acc.sem_slot, p)
+                for s in _expand(slot, acc.sem.shape):
+                    key = (acc.sem.name, s)
+                    q = outstanding.setdefault(key, [])
+                    if acc.kind == "dma_dst":
+                        carried = [pp for pp in q if pp != pass_p]
+                        if carried and key not in reported:
+                            reported.add(key)
+                            findings.append(LintFinding(
+                                rule=RULE_CARRY,
+                                message=(
+                                    f"semaphore {acc.sem.name} slot {s}: "
+                                    f"start at grid{ir.point(p)} (pass "
+                                    f"{pass_p}) while a start from pass "
+                                    f"{carried[0]} is still outstanding — "
+                                    f"per-(sem, slot) balance does not "
+                                    f"hold at the pass boundary"),
+                                kernel=ir.name))
+                        q.append(pass_p)
+                    else:                           # dma_wait
+                        if q:
+                            q.pop(0)
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# prefetch-raw
+# ---------------------------------------------------------------------------
+
+
+def check_prefetch_raw(ir: KernelIR,
+                       hb: Optional[HappensBefore] = None
+                       ) -> List[LintFinding]:
+    """A pass's first consumption waits on the copy that actually filled
+    its slot: per chain, remember which (semaphore, slot) descriptor last
+    filled each (ref, slot); a later-pass wait discharging the slot with a
+    *different* descriptor synchronizes with the wrong copy (RAW on the
+    prefetched data).  A wait on a never-filled slot is skipped silently —
+    the balance rules own that shape."""
+    findings: List[LintFinding] = []
+    hb = hb or build_order(ir)
+    if hb.n_passes <= 1:
+        return findings
+    events = [a for a in _ring_events(ir)
+              if a.kind in ("dma_dst", "dma_wait") and a.sem is not None]
+    if not events:
+        return findings
+    reported = set()
+    for chain in hb.chains:
+        # (ref, slot) -> (sem name, sem slot, pass) of the filling start
+        fill: Dict[Tuple[str, int], Tuple[str, int, int]] = {}
+        for p in chain:
+            p = int(p)
+            pass_p = int(hb.passes[p])
+            for acc in events:
+                slot = _slot_at(acc.slot(), p)
+                sem_slot = _slot_at(acc.sem_slot, p)
+                if slot is TOP or slot == "all" or sem_slot is TOP \
+                        or sem_slot == "all":
+                    continue
+                if acc.kind == "dma_dst":
+                    if not ir.may_mask(acc)[p]:
+                        continue
+                    fill[(acc.ref.name, slot)] = (acc.sem.name, sem_slot,
+                                                  pass_p)
+                else:                               # dma_wait
+                    if not ir.must_mask(acc)[p]:
+                        continue
+                    key = (acc.ref.name, slot)
+                    got = fill.get(key)
+                    if got is None:
+                        continue
+                    sem_name, filled_slot, filled_pass = got
+                    if filled_pass == pass_p:
+                        continue    # same-pass pairing: races' department
+                    if (sem_name, filled_slot) != (acc.sem.name, sem_slot) \
+                            and key not in reported:
+                        reported.add(key)
+                        findings.append(LintFinding(
+                            rule=RULE_PRAW,
+                            message=(
+                                f"slot {slot} of {acc.ref.name}: wait at "
+                                f"grid{ir.point(p)} (pass {pass_p}) "
+                                f"discharges with semaphore "
+                                f"{acc.sem.name}[{sem_slot}] but the copy "
+                                f"that filled it (pass {filled_pass}) "
+                                f"started on {sem_name}[{filled_slot}] — "
+                                f"the first consumption does not wait on "
+                                f"its filler"),
+                            kernel=ir.name))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# dma-priority
+# ---------------------------------------------------------------------------
+
+
+def _copy_bytes(acc: Access) -> int:
+    """Bytes one start into this destination moves: the product of the
+    resolved footprint sizes (full or unresolved dims count their whole
+    extent) times the element size."""
+    total = np.dtype(acc.ref.dtype).itemsize
+    if not acc.dims:
+        for n in acc.extent:
+            total *= int(n)
+        return total
+    for i, d in enumerate(acc.dims):
+        if d.full or d.size is TOP:
+            total *= int(acc.extent[i])
+        else:
+            total *= int(d.size)
+    return total
+
+
+def check_dma_priority(ir: KernelIR) -> List[LintFinding]:
+    """Bulky copies are issued before small ones: for every pair of DMA
+    destinations with different per-copy sizes, at every grid point where
+    both may issue, the first (lowest-seq) issue of the bulkier ref must
+    precede the first issue of the smaller one.  Equal sizes are
+    unconstrained (no priority to enforce)."""
+    findings: List[LintFinding] = []
+    starts = [a for a in ir.accesses if a.kind == "dma_dst"]
+    by_ref: Dict[str, List[Access]] = {}
+    for a in starts:
+        by_ref.setdefault(a.ref.name, []).append(a)
+    if len(by_ref) < 2:
+        return findings
+    G = ir.n_points
+    info = {}
+    for name, accs in by_ref.items():
+        first = np.full(G, _NO_SEQ, dtype=np.int64)
+        for a in accs:
+            may = ir.may_mask(a)
+            first = np.where(may, np.minimum(first, a.seq), first)
+        info[name] = (max(_copy_bytes(a) for a in accs), first)
+    reported = set()
+    for big, (big_bytes, big_first) in info.items():
+        for small, (small_bytes, small_first) in info.items():
+            if big == small or big_bytes <= small_bytes:
+                continue
+            both = (big_first < _NO_SEQ) & (small_first < _NO_SEQ)
+            bad = both & (small_first < big_first)
+            if bad.any() and (big, small) not in reported:
+                reported.add((big, small))
+                p = int(np.nonzero(bad)[0][0])
+                findings.append(LintFinding(
+                    rule=RULE_PRIO,
+                    message=(
+                        f"DMA issue order at grid{ir.point(p)}: the "
+                        f"{small_bytes}-byte copy into {small} is issued "
+                        f"before the {big_bytes}-byte copy into {big} — "
+                        f"bulky row-tile copies must go first so they "
+                        f"never queue behind small transfers"),
+                    kernel=ir.name))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# runner
+# ---------------------------------------------------------------------------
+
+
+def check_order(ir: KernelIR) -> List[LintFinding]:
+    """Run all four ordering rules over one kernel IR."""
+    hb = build_order(ir)
+    findings: List[LintFinding] = []
+    findings.extend(check_cross_pass_war(ir, hb))
+    findings.extend(check_sem_carryover(ir, hb))
+    findings.extend(check_prefetch_raw(ir, hb))
+    findings.extend(check_dma_priority(ir))
+    return findings

@@ -21,11 +21,17 @@ Three rules, all driven by the slot-granular :class:`~.accesses.KernelIR`:
 
 ``ring-slot-war``
     Kernel-side strengthening of ``invariants.py``'s schedule-side
-    ``ring-war`` simulation: per sequential chain, a per-(ref, slot)
-    in-flight counter driven by ``dma_start``/``dma_wait`` events; any read
-    of a ring slot whose copy is still in flight is a write-after-read /
+    ``ring-war`` simulation: per *pass-local* sequential chain (a
+    parallel-signature chain split at every pass boundary — see
+    :func:`~.order.pass_local_chains`), a per-(ref, slot) in-flight
+    counter driven by ``dma_start``/``dma_wait`` events; any read of a
+    ring slot whose copy is still in flight is a write-after-read /
     read-under-copy hazard.  This is the slot-granular check the syntactic
     linter's documented ref-base false negative could not express.
+    In-flight state that legitimately crosses a pass boundary (the
+    cross-pass prefetch contract) is owned by :mod:`~.order`'s
+    ``cross-pass-war`` rule, so this rule resets at the boundary; for
+    kernels with at most one sequential axis the two framings coincide.
 
 ``sem-balance``
     Path-sensitive semaphore balance: DMA starts and waits are counted per
@@ -47,6 +53,7 @@ import numpy as np
 
 from .accesses import TOP, Access, KernelIR, READ_KINDS, WRITE_KINDS
 from .jaxpr_lint import LintFinding
+from .order import pass_local_chains
 
 RULE_RACE = "parallel-race"
 RULE_RING = "ring-slot-war"
@@ -271,9 +278,11 @@ def check_parallel_races(ir: KernelIR) -> List[LintFinding]:
 
 
 def check_ring_war(ir: KernelIR) -> List[LintFinding]:
-    """Per-slot in-flight tracking along each sequential chain: reading a
-    ring-buffer slot whose DMA copy has started but not been waited on is
-    a read-under-copy hazard."""
+    """Per-slot in-flight tracking along each pass-local sequential chain:
+    reading a ring-buffer slot whose DMA copy has started but not been
+    waited on is a read-under-copy hazard.  State resets at every pass
+    boundary — cross-boundary residency is the prefetch contract that
+    :func:`~.order.check_cross_pass_war` proves."""
     findings: List[LintFinding] = []
     dma_refs = {a.ref.name for a in ir.accesses if a.kind == "dma_dst"}
     if not dma_refs:
@@ -284,7 +293,7 @@ def check_ring_war(ir: KernelIR) -> List[LintFinding]:
     events.sort(key=lambda a: a.seq)
     flagged = set()
     unprovable = set()
-    for chain in _chains(ir):
+    for chain in pass_local_chains(ir):
         inflight: Dict[Tuple[str, int], int] = {}
         for p in chain:
             p = int(p)

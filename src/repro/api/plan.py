@@ -49,7 +49,7 @@ _LEAF_FIELDS = (
 _AUX_FIELDS = ("kind", "policy", "block_shape", "grid", "rhs_grid",
                "n_out_blocks", "traffic_items", "fingerprint", "backend",
                "n_lanes", "unroll", "transpose_lhs", "block_dtype",
-               "out_dtype", "has_pads", "pipeline", "bn_hint")
+               "out_dtype", "has_pads", "pipeline", "bn_hint", "prefetch")
 
 
 @dataclasses.dataclass(eq=False)   # array fields make generated __eq__ ambiguous
@@ -96,6 +96,12 @@ class SegmentPlan:
     # preferred executor N-tile width (set by the repro.tune search; the
     # executor uses it when the caller passes no explicit bn)
     bn_hint: Optional[int] = None
+    # DMA schedule mode (see core.schedule.PREFETCH_MODES): "cross_pass"
+    # makes the kernels issue the next (lane, N-tile) pass's first copies
+    # during the current pass's tail step instead of draining the pipeline
+    # at the boundary; None keeps the drained schedule.  Certified
+    # hazard-free per kernel variant by repro.analysis.order.
+    prefetch: Optional[str] = None
 
     # --- pytree leaves (device arrays; None where not applicable) ---
     lhs_blocks: Optional[jax.Array] = None

@@ -43,9 +43,9 @@ from repro.core.formats import (BSR, QUANT_DTYPES, QUANT_MODES,
                                 QuantizedBlocks, quant_base_dtype,
                                 quant_is_rowwise, quantize_blocks)
 from repro.core.policies import get_policy
-from repro.core.schedule import (LaneLayout, build_spgemm_schedule,
-                                 build_spmm_schedule, fetch_flags,
-                                 finalize_schedule, lane_select,
+from repro.core.schedule import (PREFETCH_MODES, LaneLayout,
+                                 build_spgemm_schedule, build_spmm_schedule,
+                                 fetch_flags, finalize_schedule, lane_select,
                                  lane_traffic_spgemm, lane_traffic_spmm,
                                  partition_lanes)
 
@@ -98,7 +98,8 @@ def pattern_fingerprint(kind: str, policy_key: str, fold_len: Optional[int],
                         with_grad: bool, *mats: BSR, n_lanes: int = 1,
                         unroll: int = 1, block_dtype: str = "fp32",
                         n_bucket: Optional[int] = None, pipeline: bool = True,
-                        bn_hint: Optional[int] = None) -> str:
+                        bn_hint: Optional[int] = None,
+                        prefetch: Optional[str] = None) -> str:
     """Digest of everything the *schedule* and the cached pricing depend on
     (never block values).  ``policy_key`` should include the policy's
     registration serial so re-registering a name under a different ordering
@@ -114,7 +115,7 @@ def pattern_fingerprint(kind: str, policy_key: str, fold_len: Optional[int],
     h.update(f"{kind}|{policy_key}|{fold_len}|{with_grad}"
              f"|lanes={n_lanes}|unroll={unroll}"
              f"|dtype={block_dtype}|nbkt={n_bucket}"
-             f"|pipe={pipeline}|bn={bn_hint}".encode())
+             f"|pipe={pipeline}|bn={bn_hint}|pf={prefetch}".encode())
     for m in mats:
         _pattern_bytes(h, m)
     return h.hexdigest()
@@ -293,7 +294,8 @@ def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
                          with_grad: bool, n_lanes: int, unroll: int,
                          fingerprint: str, block_dtype: str = "fp32",
                          pipeline: bool = True,
-                         bn_hint: Optional[int] = None) -> _PlanTemplate:
+                         bn_hint: Optional[int] = None,
+                         prefetch: Optional[str] = None) -> _PlanTemplate:
     sched = build_spmm_schedule(a, policy=policy, fold_len=fold_len)
     fin = finalize_schedule(sched.seg_start, sched.m, n_slots=sched.n_m_blocks)
     bm, bk = a.block_shape
@@ -310,7 +312,7 @@ def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
     basis = _quantize_a_traffic(lane_traffic_spmm(
         lane_m, lane_k, flags["seg_start"],
         layout.valid.reshape(-1), layout.n_lanes, bm, bk, 1, unroll=unroll,
-        pipeline=pipeline),
+        pipeline=pipeline, prefetch=prefetch),
         block_dtype, bm, bk)
     basis.update(layout.stats)
 
@@ -344,7 +346,8 @@ def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
         grad_basis = _quantize_a_traffic(lane_traffic_spmm(
             t_lane_m, t_lane_k, t_flags["seg_start"],
             t_layout.valid.reshape(-1), t_layout.n_lanes, bk, bm, 1,
-            unroll=unroll, pipeline=pipeline), block_dtype, bk, bm)
+            unroll=unroll, pipeline=pipeline, prefetch=prefetch),
+            block_dtype, bk, bm)
         grad_basis.update(t_layout.stats)
         grad_plan = SegmentPlan(
             kind=SPMM, policy=policy, block_shape=(bk, bm),
@@ -354,7 +357,7 @@ def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
             fingerprint=fingerprint + ":grad",
             block_dtype=block_dtype,
             n_lanes=t_layout.n_lanes, unroll=unroll, transpose_lhs=True,
-            pipeline=pipeline, bn_hint=bn_hint,
+            pipeline=pipeline, bn_hint=bn_hint, prefetch=prefetch,
             has_pads=bool(not t_layout.valid.all()),
             m_idx=jnp.asarray(t_lane_m.astype(np.int32)),
             k_idx=jnp.asarray(t_lane_k.astype(np.int32)),
@@ -370,7 +373,7 @@ def _build_spmm_template(a: BSR, policy: str, fold_len: Optional[int],
         traffic_items=(),   # re-priced per realize from traffic_basis
         fingerprint=fingerprint, block_dtype=block_dtype,
         n_lanes=layout.n_lanes, unroll=unroll,
-        pipeline=pipeline, bn_hint=bn_hint,
+        pipeline=pipeline, bn_hint=bn_hint, prefetch=prefetch,
         has_pads=bool(not layout.valid.all()),
         m_idx=jnp.asarray(lane_m.astype(np.int32)),
         k_idx=jnp.asarray(lane_k.astype(np.int32)),
@@ -386,7 +389,8 @@ def _build_spgemm_template(a: BSR, b: BSR, policy: str,
                            fold_len: Optional[int], n_lanes: int, unroll: int,
                            fingerprint: str, block_dtype: str = "fp32",
                            pipeline: bool = True,
-                           bn_hint: Optional[int] = None) -> _PlanTemplate:
+                           bn_hint: Optional[int] = None,
+                           prefetch: Optional[str] = None) -> _PlanTemplate:
     sched = build_spgemm_schedule(a, b, policy=policy, fold_len=fold_len)
     fin = finalize_schedule(sched.seg_start, sched.c_idx)
     bm, bk = a.block_shape
@@ -404,7 +408,7 @@ def _build_spgemm_template(a: BSR, b: BSR, policy: str,
     traffic = _quantize_spgemm_traffic(lane_traffic_spgemm(
         lane_a, lane_b, lane_c, flags["seg_start"],
         layout.valid.reshape(-1), layout.n_lanes, bm, bk, bn, unroll=unroll,
-        pipeline=pipeline),
+        pipeline=pipeline, prefetch=prefetch),
         block_dtype, bm, bk, bn)
     traffic.update(layout.stats)
     plan = SegmentPlan(
@@ -413,7 +417,7 @@ def _build_spgemm_template(a: BSR, b: BSR, policy: str,
         traffic_items=_freeze_traffic(traffic),
         fingerprint=fingerprint, block_dtype=block_dtype,
         n_lanes=layout.n_lanes, unroll=unroll,
-        pipeline=pipeline, bn_hint=bn_hint,
+        pipeline=pipeline, bn_hint=bn_hint, prefetch=prefetch,
         has_pads=bool(not layout.valid.all()),
         a_idx=jnp.asarray(lane_a.astype(np.int32)),
         b_idx=jnp.asarray(lane_b.astype(np.int32)),
@@ -468,7 +472,8 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
                 out_dtype=None, verify=None,
                 vmem_limit_bytes: Optional[int] = None,
                 pipeline: bool = True,
-                bn_hint: Optional[int] = None) -> SegmentPlan:
+                bn_hint: Optional[int] = None,
+                prefetch: Optional[str] = None) -> SegmentPlan:
     """Plan a Segment-dataflow matmul for the sparsity pattern of ``a``.
 
     Args:
@@ -525,12 +530,29 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
       bn_hint: preferred executor N-tile width, used when the caller passes
         no explicit ``bn`` at execution time (set by the :mod:`repro.tune`
         search; ``None`` keeps the executor default of 512).
+      prefetch: DMA schedule mode (:data:`repro.core.schedule
+        .PREFETCH_MODES`).  ``"cross_pass"`` makes the SpMM kernel issue
+        the next (lane, N-tile) pass's first copies — B row-tiles before A
+        tiles — during the current pass's tail step instead of draining
+        the pipeline at the boundary; numerically identical (the mode
+        re-times copies, it never changes which items fetch).  Requires
+        the explicit DMA pipeline.  The recorded traffic gains a
+        ``prefetch_fetches`` entry pricing the overlapped copies, and
+        every shipped kernel variant with prefetch enabled is proven
+        hazard-free by :mod:`repro.analysis.order` in CI.
     """
     if backend is not None:
         resolve_backend(backend)   # fail fast on typos
     if quantize is not None and quantize not in QUANT_MODES:
         raise ValueError(f"unknown quantize dtype {quantize!r}; "
                          f"available: {QUANT_MODES} or None")
+    if prefetch not in PREFETCH_MODES:
+        raise ValueError(f"prefetch={prefetch!r} not in {PREFETCH_MODES}")
+    if prefetch is not None and not pipeline:
+        raise ValueError(
+            "prefetch='cross_pass' requires the explicit DMA pipeline "
+            "(pipeline=True); the legacy BlockSpec path has no cross-pass "
+            "copy timing to overlap")
     block_dtype = quantize if quantize is not None else "fp32"
     out_dtype = None if out_dtype is None else jnp.dtype(out_dtype).name
     if policy == "auto":
@@ -552,6 +574,8 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
             pins["pipeline"] = pipeline
         if bn_hint is not None:
             pins["bn"] = bn_hint
+        if prefetch is not None:
+            pins["prefetch"] = prefetch
         # tune for the backend the plan will actually run on: the compiled
         # model prices lanes as concurrent grid dimensions, the interpret
         # model prices the grid sequentially
@@ -567,7 +591,7 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
             unroll=best.unroll, cache=cache, quantize=quantize,
             out_dtype=out_dtype, verify=verify,
             vmem_limit_bytes=vmem_limit_bytes, pipeline=best.pipeline,
-            bn_hint=best.bn)
+            bn_hint=best.bn, prefetch=best.prefetch)
     pol = get_policy(policy)       # fail fast + serial for the cache key
     b, hint = _rhs_to_hint(a, b_or_shape)
     if n_cols_hint is not None:
@@ -582,18 +606,21 @@ def plan_matmul(a: BSR, b_or_shape=None, *, policy: str = "segment",
                               unroll=unroll, block_dtype=block_dtype,
                               n_bucket=_bucket_hint(hint) if b is None
                               else None,
-                              pipeline=pipeline, bn_hint=bn_hint)
+                              pipeline=pipeline, bn_hint=bn_hint,
+                              prefetch=prefetch)
     level = _resolve_verify(verify)
     tpl = _CACHE.get(key) if cache else None
     if tpl is None:
         if kind == SPMM:
             tpl = _build_spmm_template(a, policy, fold_len, with_grad,
                                        n_lanes, unroll, key, block_dtype,
-                                       pipeline=pipeline, bn_hint=bn_hint)
+                                       pipeline=pipeline, bn_hint=bn_hint,
+                                       prefetch=prefetch)
         else:
             tpl = _build_spgemm_template(a, b, policy, fold_len, n_lanes,
                                          unroll, key, block_dtype,
-                                         pipeline=pipeline, bn_hint=bn_hint)
+                                         pipeline=pipeline, bn_hint=bn_hint,
+                                         prefetch=prefetch)
         _STATS["misses"] += 1   # a build is a miss whether or not it's kept
         if cache:
             _CACHE[key] = tpl

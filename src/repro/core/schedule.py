@@ -562,8 +562,17 @@ def _validate_lane_accum(perm: np.ndarray, owner: np.ndarray, seg_start,
         raise ValueError(findings[0].message)
 
 
+#: valid ``prefetch=`` schedule modes: ``None`` drains the DMA pipeline at
+#: every (lane, N-tile) pass boundary; ``"cross_pass"`` issues the next
+#: pass's first copies during the current pass's tail step (the kernels'
+#: certified overlap mode — every shipped variant is proven hazard-free by
+#: ``repro.analysis.order`` before CI lets it execute).
+PREFETCH_MODES = (None, "cross_pass")
+
+
 def fetch_flags(stream: np.ndarray, valid: np.ndarray, n_lanes: int,
-                depth: int = 2) -> Tuple[np.ndarray, np.ndarray]:
+                depth: int = 2, prefetch: Optional[str] = None
+                ) -> Tuple[np.ndarray, np.ndarray]:
     """Per-item DMA fetch flags + ring-buffer slots for one operand stream.
 
     ``stream`` is a flattened lane-major array of operand indices (block
@@ -586,7 +595,16 @@ def fetch_flags(stream: np.ndarray, valid: np.ndarray, n_lanes: int,
     implements the same change-detection contract independently
     (:func:`_revisit_traffic`), and CI asserts the two counts agree exactly
     — a drift bug in either implementation trips the gate.
+
+    ``prefetch`` (one of :data:`PREFETCH_MODES`) selects the schedule mode
+    the flags will drive.  ``"cross_pass"`` changes *when* a pass's
+    lane-first copies are issued (the previous pass's tail step), never
+    *which* items fetch — the flags and slots returned here are identical
+    under both modes, which is what guarantees bit-exact numerical parity
+    between the two.
     """
+    if prefetch not in PREFETCH_MODES:
+        raise ValueError(f"prefetch={prefetch!r} not in {PREFETCH_MODES}")
     if depth < 2:
         raise ValueError(f"ring-buffer depth must be >= 2, got {depth}")
     stream = np.asarray(stream)
@@ -694,9 +712,31 @@ def _revisit_traffic(fetch_streams, owner, seg_start, valid, n_lanes,
     return fetches, int(seg_heads.size), c_bytes
 
 
+def _head_window_fetches(k, valid, n_lanes: int, unroll: int) -> int:
+    """Fetches that land in each lane's first-``unroll`` head window.
+
+    Under ``prefetch="cross_pass"`` the kernels issue exactly the copies of
+    a pass's *first grid step* (``unroll`` items per lane) during the
+    previous pass's tail, so these are the fetches that overlap compute at
+    each pass boundary.  A tiles fetch on every valid head item; B
+    row-blocks fetch where ``k`` changes within the lane (a lane's first
+    item always fetches).
+    """
+    k2 = np.asarray(k).reshape(n_lanes, -1)
+    v2 = np.asarray(valid, dtype=bool).reshape(n_lanes, -1)
+    w = min(unroll, k2.shape[1])
+    delta = np.ones_like(k2, dtype=bool)
+    if k2.shape[1] > 1:
+        delta[:, 1:] = k2[:, 1:] != k2[:, :-1]
+    a_head = int(v2[:, :w].sum())
+    b_head = int((delta[:, :w] & v2[:, :w]).sum())
+    return a_head + b_head
+
+
 def lane_traffic_spmm(m, k, seg_start, valid, n_lanes: int, bm: int, bk: int,
                       n_cols: int, bytes_per_el: int = 4,
-                      unroll: int = 1, pipeline: bool = True) -> dict:
+                      unroll: int = 1, pipeline: bool = True,
+                      prefetch: Optional[str] = None) -> dict:
     """Revisiting-model HBM bytes for the lane-parallel SpMM kernel.
 
     Arrays are flattened lane-major (``n_lanes * lane_len``).  A tiles are
@@ -707,7 +747,18 @@ def lane_traffic_spmm(m, k, seg_start, valid, n_lanes: int, bm: int, bk: int,
     owners confined to single lanes.  ``pipeline`` selects the explicit-DMA
     fetch-flag accounting (default, matching the kernels) vs the legacy
     per-BlockSpec-stream model (see :func:`_revisit_traffic`).
+
+    ``prefetch`` never changes byte totals or fetch counts — cross-pass
+    prefetch re-times copies, it does not add or drop any (see
+    :func:`fetch_flags`).  It adds a ``prefetch_fetches`` key: the number
+    of copies per (lane, N-tile) pass that the ``"cross_pass"`` mode
+    overlaps with the previous pass's tail step — the A + B fetches landing
+    in each lane's first-``unroll`` head window (0 when ``prefetch`` is
+    off).  The cost model credits that much pipeline-drain latency per
+    pass boundary; CI asserts the count against the kernels' actual flags.
     """
+    if prefetch not in PREFETCH_MODES:
+        raise ValueError(f"prefetch={prefetch!r} not in {PREFETCH_MODES}")
     fetches, c_segments, c_bytes = _revisit_traffic(
         [(k, 0, True), (k, bk * n_cols * bytes_per_el, False)],
         m, seg_start, valid, n_lanes, bm * n_cols * bytes_per_el,
@@ -716,15 +767,25 @@ def lane_traffic_spmm(m, k, seg_start, valid, n_lanes: int, bm: int, bk: int,
     a_bytes = a_fetches * bm * bk * bytes_per_el
     b_fetches, b_bytes = fetches[1]
     total = a_bytes + b_bytes + c_bytes
+    prefetch_fetches = (_head_window_fetches(k, valid, n_lanes, unroll)
+                        if prefetch == "cross_pass" else 0)
     return dict(a_bytes=a_bytes, b_bytes=b_bytes, c_bytes=c_bytes, total=total,
                 a_fetches=a_fetches, b_fetches=b_fetches,
-                c_segments=c_segments)
+                c_segments=c_segments, prefetch_fetches=prefetch_fetches)
 
 
 def lane_traffic_spgemm(a_idx, b_idx, c_idx, seg_start, valid, n_lanes: int,
                         bm: int, bk: int, bn: int, bytes_per_el: int = 4,
-                        unroll: int = 1, pipeline: bool = True) -> dict:
-    """Revisiting-model HBM bytes for the lane-parallel SpGEMM kernel."""
+                        unroll: int = 1, pipeline: bool = True,
+                        prefetch: Optional[str] = None) -> dict:
+    """Revisiting-model HBM bytes for the lane-parallel SpGEMM kernel.
+
+    ``prefetch_fetches`` is always 0 here: the SpGEMM grid has no N-tile
+    pass axis, so ``prefetch="cross_pass"`` degenerates to the drained
+    schedule (the knob is accepted for knob-grid uniformity only).
+    """
+    if prefetch not in PREFETCH_MODES:
+        raise ValueError(f"prefetch={prefetch!r} not in {PREFETCH_MODES}")
     fetches, c_segments, c_bytes = _revisit_traffic(
         [(a_idx, bm * bk * bytes_per_el, False),
          (b_idx, bk * bn * bytes_per_el, False)],
@@ -735,7 +796,7 @@ def lane_traffic_spgemm(a_idx, b_idx, c_idx, seg_start, valid, n_lanes: int,
     total = a_bytes + b_bytes + c_bytes
     return dict(a_bytes=a_bytes, b_bytes=b_bytes, c_bytes=c_bytes, total=total,
                 a_fetches=a_fetches, b_fetches=b_fetches,
-                c_segments=c_segments)
+                c_segments=c_segments, prefetch_fetches=0)
 
 
 def spmm_schedule_traffic(sched: SpmmSchedule, bm: int, bk: int, n_cols: int,

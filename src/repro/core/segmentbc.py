@@ -32,8 +32,14 @@ class VirtualRow:
     vals: List[float] = dataclasses.field(default_factory=list)
 
     def check_invariants(self) -> None:
-        assert all(self.cols[i] < self.cols[i + 1] for i in range(len(self.cols) - 1)), \
-            "column-ordering violated"
+        # a named error, not a bare assert: this must hold under python -O
+        # too (the simulator's routing correctness rests on it)
+        if any(self.cols[i] >= self.cols[i + 1]
+               for i in range(len(self.cols) - 1)):
+            raise ValueError(
+                f"virtual-row column ordering violated: cols={self.cols} "
+                f"must be strictly increasing (SEGMENTBC keeps every "
+                f"virtual row sorted so shift-based insertion stays exact)")
 
 
 class StaleLUT:
@@ -72,7 +78,9 @@ class VSpace:
     """The evolving compressed coordinate space for C (one matrix tile)."""
 
     def __init__(self, mapping: str = "lut", lut_write_ports: int = 1):
-        assert mapping in ("zero", "ideal", "lut")
+        if mapping not in ("zero", "ideal", "lut"):
+            raise ValueError(f"unknown V-space mapping {mapping!r}; "
+                             f"expected 'zero', 'ideal' or 'lut'")
         self.mapping = mapping
         self.rows: Dict[int, VirtualRow] = {}
         self.luts: Dict[int, StaleLUT] = {}

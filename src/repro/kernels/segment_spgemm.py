@@ -132,25 +132,41 @@ def _make_pipeline_kernel(lane_len: int, unroll: int, masked: bool,
             return pltpu.make_async_copy(
                 b_hbm.at[b_idx[i]], b_buf.at[slot], b_sem.at[slot])
 
-        def issue(i):
+        def issue_a(i):
             @pl.when(a_fetch[i] == 1)
             def _():
                 a_copy(i, a_slot[i]).start()
 
+        def issue_b(i):
             @pl.when(b_fetch[i] == 1)
             def _():
                 b_copy(i, b_slot[i]).start()
 
-        # pass prologue + issue-one-step-ahead pipeline (see segment_spmm)
+        # pass prologue + issue-one-step-ahead pipeline (see segment_spmm).
+        # Issue order is the DMA priority mechanism: the bulky B tiles go on
+        # the queue before the A tiles at every grid step
+        # (repro.analysis.order's dma-priority rule asserts this order; for
+        # square tiles the rule is vacuous and either order is fine, but
+        # the kernels keep one convention).
         @pl.when(s == 0)
-        def _prologue():
+        def _prologue_b():
             for g in range(unroll):
-                issue(lane_base + g)
+                issue_b(lane_base + g)
 
         @pl.when(s + 1 < n_steps)
-        def _pipeline():
+        def _pipeline_b():
             for g in range(unroll):
-                issue(base + unroll + g)
+                issue_b(base + unroll + g)
+
+        @pl.when(s == 0)
+        def _prologue_a():
+            for g in range(unroll):
+                issue_a(lane_base + g)
+
+        @pl.when(s + 1 < n_steps)
+        def _pipeline_a():
+            for g in range(unroll):
+                issue_a(base + unroll + g)
 
         for g in range(unroll):
             i = base + g
@@ -207,13 +223,14 @@ def _make_pipeline_kernel(lane_len: int, unroll: int, masked: bool,
 
 @functools.partial(jax.jit, static_argnames=(
     "n_c_blocks", "n_lanes", "unroll", "masked", "interpret", "out_dtype",
-    "pipeline"))
+    "pipeline", "prefetch"))
 def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
                    seg_write, accum_prev, valid, *, n_c_blocks: int,
                    n_lanes: int = 1, unroll: int = 1, masked: bool = True,
                    interpret: bool = False, out_dtype=jnp.float32,
                    a_scales=None, b_scales=None, a_fetch=None, b_fetch=None,
-                   a_slot=None, b_slot=None, pipeline=None):
+                   a_slot=None, b_slot=None, pipeline=None,
+                   prefetch: str | None = None):
     """Numeric SpGEMM phase.
 
     Args:
@@ -238,9 +255,16 @@ def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
       a_slot/b_slot: (n_items,) int32 resident ring-buffer slot per item.
       pipeline: True = explicit DMA pipeline (requires the four fetch
         arrays), False = legacy BlockSpec auto-pipeline, None = auto.
+      prefetch: accepted for knob-grid uniformity with ``segment_spmm``;
+        the SpGEMM grid has no N-tile pass axis, so ``"cross_pass"``
+        degenerates to the drained schedule (validated, kernel-side no-op).
     Returns:
       (n_c_blocks, bm, bn) C blocks, ordered as the symbolic pattern.
     """
+    if prefetch not in (None, "cross_pass"):
+        raise ValueError(
+            f"prefetch={prefetch!r}: expected None or 'cross_pass' "
+            f"(see repro.core.schedule.PREFETCH_MODES)")
     n_items = seg_start.shape[0]
     bm, bk = a_blocks.shape[1:]
     bn = b_blocks.shape[2]
@@ -270,6 +294,10 @@ def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
             f"per stored block ({b_blocks.shape[0]},) or per block row "
             f"({b_blocks.shape[0]}, {bk})")
     pipeline = resolve_pipeline(pipeline, (a_fetch, b_fetch, a_slot, b_slot))
+    if prefetch is not None and not pipeline:
+        raise ValueError(
+            "prefetch='cross_pass' requires the explicit DMA pipeline "
+            "(pipeline=True)")
     validate_schedule_args(
         n_items, n_lanes, unroll,
         {"a_idx": a_idx, "b_idx": b_idx, "c_idx": c_idx,
@@ -291,8 +319,8 @@ def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
 
     depth = 2 * unroll
     n_steps = lane_len // unroll
-    prefetch = (a_idx, b_idx, c_idx, seg_start, seg_write, accum_prev,
-                valid, a_fetch, b_fetch, a_slot, b_slot)
+    scalars = (a_idx, b_idx, c_idx, seg_start, seg_write, accum_prev,
+               valid, a_fetch, b_fetch, a_slot, b_slot)
     in_specs = [pl.BlockSpec(memory_space=pltpu.ANY),
                 pl.BlockSpec(memory_space=pltpu.ANY)]
     operands = [a_blocks, b_blocks]
@@ -318,7 +346,7 @@ def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
         operands.append(
             jnp.take(b_scales, b_idx, axis=0).reshape(-1, unroll, bk))
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=len(prefetch),
+        num_scalar_prefetch=len(scalars),
         grid=(n_lanes, n_steps),
         in_specs=in_specs,
         out_specs=pl.BlockSpec(
@@ -341,7 +369,7 @@ def segment_spgemm(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,
         interpret=interpret,
         compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
-    )(*prefetch, *operands)
+    )(*scalars, *operands)
 
 
 def _legacy_spgemm_call(a_blocks, b_blocks, a_idx, b_idx, c_idx, seg_start,

@@ -127,7 +127,7 @@ def _make_legacy_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
 
 def _make_pipeline_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
                           masked: bool, quant: str | None, contract_blk: int,
-                          bn: int):
+                          bn: int, prefetch: str | None = None):
     contract = (((0,), (0,)), ((), ())) if transpose_lhs \
         else (((1,), (0,)), ((), ()))
 
@@ -143,6 +143,7 @@ def _make_pipeline_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
         # repro.analysis.jaxpr_lint's program-id-in-when rule in CI
         j = pl.program_id(1)
         s = pl.program_id(2)
+        n_tiles_n = pl.num_programs(1)
         n_steps = pl.num_programs(2)
         lane_base = pl.program_id(0) * lane_len
         base = lane_base + s * unroll
@@ -153,36 +154,60 @@ def _make_pipeline_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
             return pltpu.make_async_copy(
                 a_hbm.at[slot_idx[i]], a_buf.at[slot], a_sem.at[slot])
 
-        def b_copy(i, slot):
+        def b_copy(i, slot, jj):
+            # jj is the N-tile the copy serves: the grid's own j everywhere
+            # except the cross-pass tail, which fills for tile j + 1.  Waits
+            # always run in the target pass, so the descriptor reconstructed
+            # there (with jj == j) matches the one started here.
             return pltpu.make_async_copy(
                 b_hbm.at[pl.ds(k_idx[i] * contract_blk, contract_blk),
-                         pl.ds(j * bn, bn)],
+                         pl.ds(jj * bn, bn)],
                 b_buf.at[slot], b_sem.at[slot])
 
-        def issue(i):
+        def issue_a(i):
             @pl.when(a_fetch[i] == 1)
             def _():
                 a_copy(i, a_slot[i]).start()
 
+        def issue_b(i, jj):
             @pl.when(b_fetch[i] == 1)
             def _():
-                b_copy(i, b_slot[i]).start()
+                b_copy(i, b_slot[i], jj).start()
 
-        # Pass prologue: the first grid step of every (lane, N-tile) pass
-        # fetches its own items (a lane's first item always has its fetch
-        # flags set, so nothing stale survives a pass restart) …
-        @pl.when(s == 0)
-        def _prologue():
+        # Every step issues the *next* step's copies before touching its own
+        # tiles: the DMA engine fills the other ring slots while the MXU
+        # contracts the resident ones.  Issue order is the DMA priority
+        # mechanism — the bulky B row-tiles (contract_blk × bn) are put on
+        # the queue before the small A tiles at every grid step, so the
+        # copies on the critical path start first
+        # (repro.analysis.order's dma-priority rule asserts this order).
+        # The pass prologue fetches the first step's own items; a lane's
+        # first item always has its fetch flags set, so nothing stale
+        # survives a pass restart.  Under cross-pass prefetch the tail of
+        # the previous pass already issued those copies, so the prologue
+        # only runs for the very first pass (j == 0).
+        first_step = (s == 0) & (j == 0) if prefetch == "cross_pass" \
+            else (s == 0)
+
+        @pl.when(first_step)
+        def _prologue_b():
             for g in range(unroll):
-                issue(lane_base + g)
+                issue_b(lane_base + g, j)
 
-        # … and every step issues the *next* step's copies before touching
-        # its own tiles: the DMA engine fills the other ring slots while the
-        # MXU contracts the resident ones.
         @pl.when(s + 1 < n_steps)
-        def _pipeline():
+        def _pipeline_b():
             for g in range(unroll):
-                issue(base + unroll + g)
+                issue_b(base + unroll + g, j)
+
+        @pl.when(first_step)
+        def _prologue_a():
+            for g in range(unroll):
+                issue_a(lane_base + g)
+
+        @pl.when(s + 1 < n_steps)
+        def _pipeline_a():
+            for g in range(unroll):
+                issue_a(base + unroll + g)
 
         for g in range(unroll):
             i = base + g
@@ -206,7 +231,7 @@ def _make_pipeline_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
 
             @pl.when(b_fetch[i] == 1)
             def _wait_b(i=i):
-                b_copy(i, b_slot[i]).wait()
+                b_copy(i, b_slot[i], j).wait()
 
             a_tile = a_buf[a_slot[i]].astype(jnp.float32)
             if quant == "rowwise":
@@ -235,6 +260,32 @@ def _make_pipeline_kernel(lane_len: int, unroll: int, transpose_lhs: bool,
             @pl.when(seg_write[i] == 1)
             def _write(i=i):
                 out[...] = acc[...].astype(out.dtype)
+
+        if prefetch == "cross_pass":
+            # Cross-pass tail: the last step of pass j issues pass j + 1's
+            # first copies while this pass's final contractions retire, so
+            # the next pass never drains the pipeline.  Placement at the
+            # *end* of the body matters — the lane-first ring slots may
+            # still be read by this very step (an all-same-k lane reuses
+            # slot 0 throughout), so the overwriting copies must start
+            # after this step's consumption.  B row-tiles first (DMA
+            # priority), for tile j + 1; A tiles are N-independent but
+            # their ring slots were recycled during this pass, so they are
+            # re-fetched exactly as a drained prologue would.
+            # repro.analysis.order's cross-pass-war / sem-carryover /
+            # prefetch-raw rules certify this tail hazard-free for every
+            # shipped variant before CI lets it execute.
+            tail = (s + 1 == n_steps) & (j + 1 < n_tiles_n)
+
+            @pl.when(tail)
+            def _tail_b():
+                for g in range(unroll):
+                    issue_b(lane_base + g, j + 1)
+
+            @pl.when(tail)
+            def _tail_a():
+                for g in range(unroll):
+                    issue_a(lane_base + g)
 
     return _kernel
 
@@ -279,13 +330,15 @@ def resolve_pipeline(pipeline, fetch_arrays) -> bool:
 @functools.partial(
     jax.jit,
     static_argnames=("grid_m", "n_lanes", "bn", "unroll", "transpose_lhs",
-                     "masked", "interpret", "out_dtype", "pipeline"))
+                     "masked", "interpret", "out_dtype", "pipeline",
+                     "prefetch"))
 def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
                  accum_prev, valid, b_dense, *, grid_m: int, n_lanes: int = 1,
                  bn: int = 512, unroll: int = 1, transpose_lhs: bool = False,
                  masked: bool = True, interpret: bool = False,
                  out_dtype=jnp.float32, a_scales=None, a_fetch=None,
-                 b_fetch=None, a_slot=None, b_slot=None, pipeline=None):
+                 b_fetch=None, a_slot=None, b_slot=None, pipeline=None,
+                 prefetch: str | None = None):
     """Compute ``C = BSR(A) @ B`` (or ``BSR(A)ᵀ @ B``) under a lane-parallel
     Segment schedule with an explicit double-buffered DMA pipeline.
 
@@ -325,9 +378,20 @@ def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
       pipeline: True = explicit DMA pipeline (requires the four fetch
         arrays), False = legacy BlockSpec auto-pipeline, None = auto
         (pipelined iff the arrays are present).
+      prefetch: ``None`` drains the DMA pipeline at every (lane, N-tile)
+        pass boundary; ``"cross_pass"`` issues pass ``j+1``'s first copies
+        (B row-tiles before A tiles) during pass ``j``'s tail step, so a
+        multi-N-tile grid never stalls on a pass restart.  Requires the
+        explicit pipeline; the mode changes only *when* lane-first copies
+        issue, never which items fetch, so results are bit-identical.
+        Certified hazard-free per variant by ``repro.analysis.order``.
     Returns:
       (grid_m * row_block, N) dense output.
     """
+    if prefetch not in (None, "cross_pass"):
+        raise ValueError(
+            f"prefetch={prefetch!r}: expected None or 'cross_pass' "
+            f"(see repro.core.schedule.PREFETCH_MODES)")
     _, bm, bk = a_blocks.shape
     if a_scales is not None and a_scales.shape not in (
             (a_blocks.shape[0],), (a_blocks.shape[0], bm)):
@@ -348,6 +412,11 @@ def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
             f"not divisible by the N-tile width bn={bn}; pad N or pick a "
             f"divisor (see repro.api.pick_bn)")
     pipeline = resolve_pipeline(pipeline, (a_fetch, b_fetch, a_slot, b_slot))
+    if prefetch is not None and not pipeline:
+        raise ValueError(
+            "prefetch='cross_pass' requires the explicit DMA pipeline "
+            "(pipeline=True); the legacy BlockSpec path has no cross-pass "
+            "copy timing to overlap")
     validate_schedule_args(
         seg_start.shape[0], n_lanes, unroll,
         {"slot_idx": slot_idx, "m_idx": m_idx, "k_idx": k_idx,
@@ -370,8 +439,8 @@ def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
 
     depth = 2 * unroll
     n_steps = lane_len // unroll
-    prefetch = (slot_idx, m_idx, k_idx, seg_start, seg_write, accum_prev,
-                valid, a_fetch, b_fetch, a_slot, b_slot)
+    scalars = (slot_idx, m_idx, k_idx, seg_start, seg_write, accum_prev,
+               valid, a_fetch, b_fetch, a_slot, b_slot)
     in_specs = [pl.BlockSpec(memory_space=pltpu.ANY),
                 pl.BlockSpec(memory_space=pltpu.ANY)]
     operands = [a_blocks, b_dense]
@@ -390,7 +459,7 @@ def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
             (1, unroll, bm), lambda l, j, s, *rest: (l * n_steps + s, 0, 0)))
         operands.append(scale_items)
     grid_spec = pltpu.PrefetchScalarGridSpec(
-        num_scalar_prefetch=len(prefetch),
+        num_scalar_prefetch=len(scalars),
         grid=(n_lanes, n_tiles_n, n_steps),
         in_specs=in_specs,
         out_specs=pl.BlockSpec(
@@ -406,15 +475,20 @@ def segment_spmm(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,
         ],
     )
     kernel = _make_pipeline_kernel(lane_len, unroll, transpose_lhs, masked,
-                                   quant, contract_blk, bn)
+                                   quant, contract_blk, bn, prefetch)
+    # Under cross-pass prefetch the N-tile axis carries live DMA state
+    # across its boundary (the tail's in-flight copies), so it must be
+    # declared sequential — only the lane axis stays parallel.
+    semantics = ("parallel", "arbitrary", "arbitrary") \
+        if prefetch == "cross_pass" \
+        else ("parallel", "parallel", "arbitrary")
     return pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=out_shape,
         interpret=interpret,
-        compiler_params=CompilerParams(
-            dimension_semantics=("parallel", "parallel", "arbitrary")),
-    )(*prefetch, *operands)
+        compiler_params=CompilerParams(dimension_semantics=semantics),
+    )(*scalars, *operands)
 
 
 def _legacy_spmm_call(a_blocks, slot_idx, m_idx, k_idx, seg_start, seg_write,

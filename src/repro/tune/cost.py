@@ -44,6 +44,13 @@ class CostModel:
     step_us: float               # per-grid-step overhead, microseconds
     lane_parallel: bool = True   # False: lanes execute sequentially
     legacy_factor: float = 1.0   # cost multiplier for pipeline=False plans
+    # fraction of one step's overhead that prefetch="cross_pass" saves at
+    # each of the (n_tiles_n - 1) pass boundaries: real hardware overlaps
+    # the boundary pipeline drain with the previous pass's tail compute
+    # (1.0), while the sequential interpreter replays every copy inline
+    # and saves nothing (0.0) — so prefetch never wins the interpret
+    # objective on a phantom credit
+    prefetch_step_credit: float = 0.0
 
     def steps(self, *, n_lanes: int, lane_len: int, unroll: int,
               n_tiles_n: int = 1) -> float:
@@ -57,11 +64,15 @@ class CostModel:
 
     def cost_us(self, *, traffic_bytes: float, n_lanes: int, lane_len: int,
                 unroll: int, n_tiles_n: int = 1,
-                pipelined: bool = True) -> float:
+                pipelined: bool = True, prefetch: bool = False) -> float:
         base = (traffic_bytes / self.bytes_per_us
                 + self.steps(n_lanes=n_lanes, lane_len=lane_len,
                              unroll=unroll, n_tiles_n=n_tiles_n)
                 * self.step_us)
+        if prefetch and pipelined and n_tiles_n > 1:
+            # cross-pass prefetch hides one boundary drain per N-tile
+            # transition (worth a step_us fraction set by the model)
+            base -= (n_tiles_n - 1) * self.step_us * self.prefetch_step_credit
         return base if pipelined else base * self.legacy_factor
 
 
@@ -103,7 +114,8 @@ def calibrate(samples: Iterable[Tuple[float, float, float]],
 #: compiled-target model: ~800 GB/s effective HBM, 0.5 us per grid step,
 #: lanes concurrent.  Not yet calibrated against real-device timings (no
 #: accelerator in CI) — the coefficients set plausible relative weights.
-DEFAULT_TPU = CostModel(bytes_per_us=8.0e5, step_us=0.5, lane_parallel=True)
+DEFAULT_TPU = CostModel(bytes_per_us=8.0e5, step_us=0.5, lane_parallel=True,
+                        prefetch_step_credit=1.0)
 
 #: interpret-backend model, fixed against BENCH_kernels.json timings
 #: (autotune_sweep refits and reports both coefficient sets every run):

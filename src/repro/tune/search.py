@@ -1,7 +1,8 @@
 """Analytical schedule search + adaptive dataflow selection.
 
 :func:`autotune_matmul` sweeps the knob grid — ``fold_len`` × ``n_lanes`` ×
-``unroll`` × ``bn`` × ``pipeline`` — across every registered schedule policy
+``unroll`` × ``bn`` × ``pipeline`` × ``prefetch`` — across every registered
+schedule policy
 and scores each candidate with the unified :class:`~repro.tune.cost.CostModel`
 (lane-aware revisiting-model traffic bytes + a per-grid-step overhead term;
 imbalance and padding are priced structurally through the padded lane
@@ -66,6 +67,7 @@ class Candidate:
     unroll: int
     bn: int
     pipeline: bool
+    prefetch: Optional[str] = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +83,7 @@ class SearchSpace:
     unrolls: Tuple[int, ...] = (1, 2)
     bns: Tuple[int, ...] = (128, 512)
     pipelines: Tuple[bool, ...] = (True, False)
+    prefetches: Tuple[Optional[str], ...] = (None, "cross_pass")
     policies: Optional[Tuple[str, ...]] = None
 
 
@@ -118,7 +121,8 @@ class TuneResult:
         the winning schedule."""
         c = self.best.candidate
         return dict(policy=c.policy, fold_len=c.fold_len, n_lanes=c.n_lanes,
-                    unroll=c.unroll, pipeline=c.pipeline, bn_hint=c.bn)
+                    unroll=c.unroll, pipeline=c.pipeline, bn_hint=c.bn,
+                    prefetch=c.prefetch)
 
 
 #: fingerprint → TuneResult; cleared by repro.api.clear_plan_cache
@@ -162,13 +166,15 @@ def _search_key(kind: str, mats, n_bucket: Optional[int], with_grad: bool,
 def _rank_key(s: Scored, policy_order: Tuple[str, ...]):
     """Total order on scored candidates: model cost, then traffic bytes,
     then every tie broken toward the planner's default point (segment
-    first, fewer lanes, smaller unroll, no fold, pipelined, wider bn)."""
+    first, fewer lanes, smaller unroll, no fold, no prefetch, pipelined,
+    wider bn)."""
     c = s.candidate
     return (s.cost_us, s.traffic_total,
             policy_order.index(c.policy) if c.policy in policy_order
             else len(policy_order),
             c.n_lanes, c.unroll,
             c.fold_len is not None, c.fold_len or 0,
+            c.prefetch is not None,
             not c.pipeline, -c.bn)
 
 
@@ -199,31 +205,39 @@ def _score_spmm(a: BSR, hint: int, block_dtype: str, model: CostModel,
                     ss = lane_select(layout, sched.seg_start, zero_pads=True)
                     valid = layout.valid.reshape(-1)
                     for pipe in _pin(pins, "pipeline", space.pipelines):
-                        traffic = _quantize_a_traffic(lane_traffic_spmm(
-                            lane_m, lane_k, ss, valid, layout.n_lanes,
-                            bm, bk, hint, unroll=un, pipeline=pipe),
-                            block_dtype, bm, bk)
-                        for bn in _pin(pins, "bn", space.bns):
-                            bn_eff, pad = pick_bn(max(1, hint), bn)
-                            n_tiles = (max(1, hint) + pad) // bn_eff
-                            vbytes = spmm_vmem_bytes(
-                                bm=bm, bk=bk, bn=bn_eff, unroll=un,
-                                block_dtype=_vmem_dtype(block_dtype),
-                                quantized=block_dtype != "fp32",
-                                rowwise=block_dtype.endswith(".rowwise"),
-                                pipelined=pipe)
-                            if vbytes > limit:
-                                rejected += 1
-                                continue
-                            cost = model.cost_us(
-                                traffic_bytes=traffic["total"],
-                                n_lanes=layout.n_lanes,
-                                lane_len=layout.lane_len, unroll=un,
-                                n_tiles_n=n_tiles, pipelined=pipe)
-                            scored.append(Scored(
-                                Candidate(policy, fold, lanes, un, bn, pipe),
-                                cost, tuple(sorted(traffic.items())),
-                                layout.lane_len, n_tiles, vbytes))
+                        # cross-pass prefetch only exists on the explicit
+                        # DMA pipeline; the legacy path sweeps prefetch=None
+                        pfs = (_pin(pins, "prefetch", space.prefetches)
+                               if pipe else (None,))
+                        for pf in pfs:
+                            traffic = _quantize_a_traffic(lane_traffic_spmm(
+                                lane_m, lane_k, ss, valid, layout.n_lanes,
+                                bm, bk, hint, unroll=un, pipeline=pipe,
+                                prefetch=pf),
+                                block_dtype, bm, bk)
+                            for bn in _pin(pins, "bn", space.bns):
+                                bn_eff, pad = pick_bn(max(1, hint), bn)
+                                n_tiles = (max(1, hint) + pad) // bn_eff
+                                vbytes = spmm_vmem_bytes(
+                                    bm=bm, bk=bk, bn=bn_eff, unroll=un,
+                                    block_dtype=_vmem_dtype(block_dtype),
+                                    quantized=block_dtype != "fp32",
+                                    rowwise=block_dtype.endswith(".rowwise"),
+                                    pipelined=pipe)
+                                if vbytes > limit:
+                                    rejected += 1
+                                    continue
+                                cost = model.cost_us(
+                                    traffic_bytes=traffic["total"],
+                                    n_lanes=layout.n_lanes,
+                                    lane_len=layout.lane_len, unroll=un,
+                                    n_tiles_n=n_tiles, pipelined=pipe,
+                                    prefetch=pf is not None)
+                                scored.append(Scored(
+                                    Candidate(policy, fold, lanes, un, bn,
+                                              pipe, pf),
+                                    cost, tuple(sorted(traffic.items())),
+                                    layout.lane_len, n_tiles, vbytes))
     return scored, rejected, tuple(policies)
 
 
@@ -274,7 +288,8 @@ def _score_spgemm(a: BSR, b: BSR, block_dtype: str, model: CostModel,
                             lane_len=layout.lane_len, unroll=un, n_tiles_n=1,
                             pipelined=pipe)
                         scored.append(Scored(
-                            Candidate(policy, fold, lanes, un, bn, pipe),
+                            Candidate(policy, fold, lanes, un, bn, pipe,
+                                      pins.get("prefetch") if pipe else None),
                             cost, tuple(sorted(traffic.items())),
                             layout.lane_len, 1, vbytes))
     return scored, rejected, tuple(policies)
@@ -303,7 +318,7 @@ def _dataflow_scores(kind: str, a: BSR, b: Optional[BSR], hint: int,
     for s in scored:
         c = s.candidate
         if (c.fold_len is None and c.n_lanes == 1 and c.unroll == 1
-                and c.pipeline):
+                and c.pipeline and c.prefetch is None):
             scores[c.policy] = s.traffic_total
     return scores
 
@@ -323,7 +338,8 @@ def autotune_matmul(a: BSR, b_or_shape=None, *,
     are rejected by the closed-form VMEM budget; the ranked winner is built
     once and must pass ``verify_plan(level="full")`` plus the plan-level
     VMEM gate, else the runner-up is promoted.  ``pins`` maps knob names
-    (``policy``/``fold_len``/``n_lanes``/``unroll``/``bn``/``pipeline``) to
+    (``policy``/``fold_len``/``n_lanes``/``unroll``/``bn``/``pipeline``/
+    ``prefetch``) to
     values the search must keep fixed.  Results are cached by pattern
     fingerprint (``cache=True``) so repeat patterns skip the sweep."""
     from repro.api import planner as _planner
@@ -382,7 +398,7 @@ def autotune_matmul(a: BSR, b_or_shape=None, *,
             a, b_or_shape, policy=c.policy, fold_len=c.fold_len,
             with_grad=with_grad, n_cols_hint=hint, n_lanes=c.n_lanes,
             unroll=c.unroll, cache=False, quantize=quantize,
-            pipeline=c.pipeline, bn_hint=c.bn)
+            pipeline=c.pipeline, bn_hint=c.bn, prefetch=c.prefetch)
         try:
             verify_plan(plan, level="full").raise_if_findings()
             bn_eff, _ = pick_bn(max(1, hint), c.bn)
